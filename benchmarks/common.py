@@ -1,0 +1,26 @@
+"""Shared benchmark plumbing: CSV emission + tiny timing helpers."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    """One CSV row: name,value,derived."""
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def header() -> None:
+    print("name,value,derived", flush=True)
+
+
+def time_us(fn, *args, repeats: int = 3, **kw) -> float:
+    """Median wall time of fn in microseconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,31 @@
+"""Paper Figures 11/12 — Linux locktorture, high (N=20) and moderate (N=400)
+contention: CS = 20 PRNG steps, NCS uniform in [0,N]."""
+
+from __future__ import annotations
+
+from repro.sim.workloads import median_throughput
+
+from .common import emit
+
+THREADS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def run(threads=THREADS, runs: int = 3) -> dict:
+    curves = {}
+    for fig, ncs in (("fig11", 20), ("fig12", 400)):
+        for lock in ("ticket", "twa", "mcs"):
+            curve = []
+            for t in threads:
+                tp = median_throughput(lock, t, runs=runs, cs_work=20,
+                                       ncs_max=ncs)
+                emit(f"{fig}/{lock}/threads={t}", f"{tp:.6f}", f"ncs_max={ncs}")
+                curve.append(tp)
+            curves[f"{fig}/{lock}"] = curve
+        emit(f"{fig}/twa_over_ticket@64",
+             f"{curves[f'{fig}/twa'][-1] / curves[f'{fig}/ticket'][-1]:.3f}",
+             "paper: >1 at high T")
+    return curves
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Figure 1 — Invalidation Diameter.
+
+One writer FetchAdds a shared word while T-1 readers poll it; writer
+throughput degrades as the reader count (the number of caches the store must
+invalidate) grows.  Reproduced on the lockVM coherence model.
+
+Claim validated: writer ops/cycle decreases monotonically with readers.
+"""
+
+from __future__ import annotations
+
+from repro.sim.workloads import fig1_invalidation_diameter
+
+from .common import emit
+
+READERS = (0, 1, 3, 7, 15, 31, 63)
+
+
+def run() -> dict:
+    tp = fig1_invalidation_diameter(READERS)
+    out = {}
+    for r, t in zip(READERS, tp):
+        emit(f"fig1/readers={r}", f"{t:.6f}", "writer_ops_per_cycle")
+        out[r] = t
+    drop = tp[-1] / tp[0] if tp[0] else float("nan")
+    emit("fig1/throughput_ratio_63r_vs_0r", f"{drop:.4f}",
+         "monotone_decreasing=" + str(all(a >= b for a, b in zip(tp, tp[1:]))))
+    return out
+
+
+if __name__ == "__main__":
+    run()

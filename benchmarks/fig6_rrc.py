@@ -1,0 +1,40 @@
+"""Paper Figure 6 — Random Replacement Cache profile (and the LevelDB /
+RocksDB profiles of Figs 8-10, which cannot run in this container: their
+contention *profile* — a mixed-length critical section around a central
+lock with short think time — is matched here on the lockVM; stated in
+DESIGN.md §9).
+
+CS length random in [30, 80) PRNG steps (hash + cache ops), NCS in [0,200).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.workloads import run_contention
+
+from .common import emit
+
+THREADS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def run(threads=THREADS, runs: int = 3, profile: str = "rrc") -> dict:
+    cs_rand = (30, 50) if profile == "rrc" else (10, 30)  # db: shorter CS
+    curves = {}
+    for lock in ("ticket", "twa", "mcs"):
+        curve = []
+        for t in threads:
+            tp = float(np.median([run_contention(
+                lock, t, cs_rand=cs_rand, ncs_max=200,
+                seed=s + 1)["throughput"] for s in range(runs)]))
+            emit(f"fig6[{profile}]/{lock}/threads={t}", f"{tp:.6f}",
+                 "acq_per_cycle")
+            curve.append(tp)
+        curves[lock] = curve
+    emit(f"fig6[{profile}]/twa_over_ticket@64",
+         f"{curves['twa'][-1] / curves['ticket'][-1]:.3f}", "paper: >1")
+    return curves
+
+
+if __name__ == "__main__":
+    run()

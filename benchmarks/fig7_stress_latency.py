@@ -1,0 +1,32 @@
+"""Paper Figure 7 — libslock stress_latency: fixed CS = 200 delay-loop
+iterations, NCS = 5000 (scaled 1:25 on the lockVM to keep sim time bounded:
+CS=20, NCS fixed 500)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.workloads import run_contention
+
+from .common import emit
+
+THREADS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def run(threads=THREADS, runs: int = 3) -> dict:
+    curves = {}
+    for lock in ("ticket", "twa", "mcs"):
+        curve = []
+        for t in threads:
+            tp = float(np.median([run_contention(
+                lock, t, cs_work=20, cs_rand=None, ncs_max=0,
+                seed=s + 1, horizon=1_000_000)["throughput"]
+                for s in range(runs)]))
+            emit(f"fig7/{lock}/threads={t}", f"{tp:.6f}", "acq_per_cycle")
+            curve.append(tp)
+        curves[lock] = curve
+    return curves
+
+
+if __name__ == "__main__":
+    run()

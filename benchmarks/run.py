@@ -1,0 +1,57 @@
+"""Benchmark driver — one module per paper table/figure + framework-level
+benchmarks.  Prints ``name,value,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,table1]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from .common import emit, header
+
+SUITES = [
+    ("table1", "benchmarks.table1_complexity"),
+    ("fig1", "benchmarks.fig1_invalidation_diameter"),
+    ("fig2", "benchmarks.fig2_interlock_interference"),
+    ("fig3", "benchmarks.fig3_mutexbench"),
+    ("fig5", "benchmarks.fig5_throw"),
+    ("fig6", "benchmarks.fig6_rrc"),
+    ("fig7", "benchmarks.fig7_stress_latency"),
+    ("fig11", "benchmarks.fig11_locktorture"),
+    ("threads", "benchmarks.threads_microbench"),
+    ("admission", "benchmarks.framework_admission"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite prefixes to run")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    header()
+    t_start = time.time()
+    failures = []
+    for name, module in SUITES:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+            emit(f"{name}/_elapsed_s", f"{time.time() - t0:.1f}", "ok")
+        except Exception as e:  # keep the suite going; report at the end
+            failures.append((name, repr(e)))
+            emit(f"{name}/_elapsed_s", f"{time.time() - t0:.1f}",
+                 f"FAILED: {e!r}")
+    emit("run/_total_s", f"{time.time() - t_start:.1f}",
+         f"failures={len(failures)}")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

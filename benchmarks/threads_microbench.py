@@ -1,0 +1,59 @@
+"""Real-thread microbenchmark (§4.2 analogue on host threads).
+
+CPython's GIL hides most cache-coherence effects, so this benchmark validates
+deployment-grade behaviour (correctness under real preemption, comparable
+throughput across algorithms, FIFO fairness) rather than the scalability
+curve, which the lockVM reproduces.  Reported per lock algorithm: aggregate
+acquisitions over a fixed wall-clock window and the max-min fairness spread.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core import make_lock
+
+from .common import emit
+
+THREADS = (1, 4, 16)
+WINDOW_S = 0.4
+
+
+def _contend(lock, n_threads: int, window_s: float = WINDOW_S):
+    counts = [0] * n_threads
+    stop = time.perf_counter() + window_s
+    barrier = threading.Barrier(n_threads)
+
+    def worker(i):
+        barrier.wait()
+        x = 0
+        while time.perf_counter() < stop:
+            lock.acquire()
+            x += 1          # critical section
+            counts[i] += 1
+            lock.release()
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    return counts
+
+
+def run() -> dict:
+    out = {}
+    for kind in ("ticket", "twa", "mcs"):
+        for n in THREADS:
+            counts = _contend(make_lock(kind), n)
+            total = sum(counts)
+            spread = (max(counts) - min(counts)) / max(total, 1)
+            emit(f"threads/{kind}/threads={n}", total,
+                 f"fairness_spread={spread:.3f}")
+            out[(kind, n)] = total
+    return out
+
+
+if __name__ == "__main__":
+    run()

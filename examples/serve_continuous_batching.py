@@ -1,0 +1,65 @@
+"""End-to-end serving: continuous batching with ticket-FIFO admission.
+
+Client threads submit prompts and block in TWA two-tier waiting; the engine
+prefills into free lanes, decodes all lanes in one batched step, and advances
+the grant counter as lanes finish.  Prints per-request latency and the
+admission telemetry that shows bounded hot-counter polling.
+
+    PYTHONPATH=src python examples/serve_continuous_batching.py
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import init_params
+from repro.serve import ServeEngine
+
+ARCH = "gemma3-1b"
+N_REQUESTS = 10
+LANES = 3
+
+cfg = get_config(ARCH).reduced()
+params = init_params(cfg, jax.random.PRNGKey(0))
+eng = ServeEngine(cfg, params, lanes=LANES, max_ctx=96, temperature=0.7,
+                  seed=0)
+
+rng = np.random.default_rng(0)
+results = {}
+
+
+def client(i):
+    prompt = rng.integers(1, cfg.vocab, size=int(rng.integers(4, 20))).tolist()
+    t0 = time.time()
+    req = eng.submit(prompt, max_new_tokens=int(rng.integers(4, 10)))
+    eng.wait(req)                      # two-tier TWA waiting for admission
+    results[req.ticket] = {
+        "latency_s": time.time() - t0,
+        "prompt_len": len(prompt),
+        "generated": req.tokens_out,
+        "admit_step": req.admitted_at_step,
+    }
+
+
+clients = [threading.Thread(target=client, args=(i,)) for i in range(N_REQUESTS)]
+for c in clients:
+    c.start()
+time.sleep(0.05)
+engine = threading.Thread(target=eng.run)
+engine.start()
+engine.join()
+for c in clients:
+    c.join()
+
+print(f"{'ticket':>7} {'prompt':>7} {'#gen':>5} {'admit@':>7} {'latency':>9}")
+for tx in sorted(results):
+    r = results[tx]
+    print(f"{tx:>7} {r['prompt_len']:>7} {len(r['generated']):>5} "
+          f"{r['admit_step']:>7} {r['latency_s']:>8.2f}s")
+admits = [results[tx]["admit_step"] for tx in sorted(results)]
+assert all(a <= b for a, b in zip(admits, admits[1:])), "FIFO violated!"
+print(f"\nFIFO admission order: OK ({N_REQUESTS} requests, {LANES} lanes)")
+print("admission telemetry:", eng.stats())

@@ -1,0 +1,202 @@
+"""Sharded checkpointing with TWA-arbitrated writer slots.
+
+Layout per step::
+
+    <root>/step_<N>/
+        manifest.json          # tree structure, shapes, dtypes, step, world
+        shard_<host>.npz       # this host's addressable leaf slices
+        COMMIT                 # written last: restore ignores uncommitted dirs
+
+Writes are atomic (tmp dir + rename + COMMIT marker), so a crash mid-save
+never corrupts the latest checkpoint.  On a cluster, hosts serialize their
+writes through a :class:`WriterGate` — a distributed TWA ticket gate over the
+coordination store that bounds concurrent writers (storage-fabric burst
+control) while keeping strict FIFO fairness; dead holders are recovered by
+lease expiry (grant advances past them).
+
+Restore supports *re-sharding*: the manifest stores global shapes; any new
+mesh/world reads the same arrays and `jax.device_put`s them with the new
+sharding — the elastic-rescale path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+from repro.core import DistributedTWALock, FileKVStore, LeaseGuard
+
+SEP = "\x1d"
+
+
+def _flatten(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def _treedef_of(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def save(tree, root: str, step: int, *, host: int = 0, world: int = 1,
+         keep: int = 3) -> str:
+    """Write one host's shard + (host 0) the manifest; returns the ckpt dir."""
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + f".tmp{host}"
+    os.makedirs(tmp if host == 0 else final, exist_ok=True)
+    wdir = tmp if host == 0 else final
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(wdir, f"shard_{host}.npz"), **arrays)
+    if host == 0:
+        manifest = {
+            "step": step,
+            "world": world,
+            "keys": sorted(arrays),
+            "shapes": {k: list(a.shape) for k, a in arrays.items()},
+            "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+        }
+        with open(os.path.join(wdir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.isdir(final):
+            for name in os.listdir(final):
+                os.replace(os.path.join(final, name), os.path.join(tmp, name))
+            os.rmdir(final)
+        os.replace(tmp, final)
+        with open(os.path.join(final, "COMMIT"), "w") as f:
+            f.write("ok")
+        _gc(root, keep)
+    return final
+
+
+def _gc(root: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(root)
+                   if d.startswith("step_") and ".tmp" not in d)
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+
+
+def latest_step(root: str) -> int | None:
+    """Newest committed checkpoint step, or None."""
+    if not os.path.isdir(root):
+        return None
+    best = None
+    for d in os.listdir(root):
+        if d.startswith("step_") and ".tmp" not in d:
+            if os.path.exists(os.path.join(root, d, "COMMIT")):
+                s = int(d.split("_")[1])
+                best = s if best is None or s > best else best
+    return best
+
+
+def restore(root: str, step: int | None = None, *, like=None,
+            shardings=None):
+    """Load a checkpoint into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs).  `shardings`, if given (a parallel pytree of
+    NamedSharding), re-shards onto the current mesh — the restored run may
+    use a different world size than the saver."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {root}")
+    cdir = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(cdir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = {}
+    for fname in sorted(os.listdir(cdir)):
+        if fname.startswith("shard_") and fname.endswith(".npz"):
+            with np.load(os.path.join(cdir, fname)) as z:
+                for k in z.files:
+                    data[k] = z[k]
+    missing = set(manifest["keys"]) - set(data)
+    if missing:
+        raise IOError(f"checkpoint step {step} missing leaves: {missing}")
+    assert like is not None, "restore() needs `like` for the tree structure"
+    flat_like = _flatten(like)
+    leaves = []
+    for key in flat_like:
+        arr = data[key]
+        want = flat_like[key]
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(f"{key}: ckpt shape {arr.shape} != {want.shape}")
+        leaves.append(arr.astype(want.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        _treedef_of(like), [data[k].astype(flat_like[k].dtype)
+                            for k in _flatten(like)])
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree, step
+
+
+class WriterGate:
+    """Bounds concurrent checkpoint writers across hosts (FIFO, TWA waiting).
+
+    ``slots`` writers proceed at once; the rest park on hashed notification
+    keys instead of hammering the grant key — the coordination-service
+    analogue of bounding the invalidation diameter during handover.
+    """
+
+    def __init__(self, store_root: str, *, slots: int = 4,
+                 name: str = "ckpt-writers") -> None:
+        self.store = FileKVStore(store_root)
+        self.slots = slots
+        self._locks = [DistributedTWALock(self.store, f"{name}/slot{i}")
+                       for i in range(slots)]
+        self._held: dict[int, int] = {}
+        self._mutex = threading.Lock()
+
+    def acquire(self, host: int) -> int:
+        slot = host % self.slots          # static stripe; FIFO within stripe
+        self._locks[slot].acquire()
+        with self._mutex:
+            self._held[host] = slot
+        return slot
+
+    def release(self, host: int) -> None:
+        with self._mutex:
+            slot = self._held.pop(host)
+        self._locks[slot].release()
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget save on a background thread (one in flight; the next
+    save waits — checkpoint cadence should outpace write time or you have a
+    storage problem, not a framework problem)."""
+
+    def __init__(self, root: str, *, keep: int = 3) -> None:
+        self.root = root
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_error: Exception | None = None
+
+    def save(self, tree, step: int, *, host: int = 0, world: int = 1) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
+
+        def _do():
+            try:
+                save(host_tree, self.root, step, host=host, world=world,
+                     keep=self.keep)
+            except Exception as e:                  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_do, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

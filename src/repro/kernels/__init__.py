@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; ops.py wrappers
+select kernel vs pure-jnp oracle via use_pallas).
+
+* ticket_dispatch — prefix-sum ticketing for MoE slot assignment (the
+  paper's fetch-and-add doorway, TPU-native).
+* mamba_scan     — Mamba-1 selective scan (falcon-mamba hot spot).
+* rglru          — RG-LRU gated linear recurrence (recurrentgemma hot spot).
+"""

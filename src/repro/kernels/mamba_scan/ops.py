@@ -1,0 +1,28 @@
+"""Public op for the selective scan (kernel, chunked-associative, or
+sequential oracle path).
+
+$REPRO_SCAN_CHUNK=<Lc> (trace-time) selects the chunked associative scan —
+the TPU-friendly formulation (log-depth within chunks, L/Lc sequential
+steps); 0/unset keeps the sequential reference.  The Pallas kernel is the
+hardware path on real TPUs.
+"""
+
+from __future__ import annotations
+
+import os
+
+from .kernel import selective_scan_pallas
+from .ref import selective_scan_chunked, selective_scan_ref
+
+
+def selective_scan(x, dt, A, B, C, D_skip, h0=None, use_pallas: bool = False):
+    """(y, h_final) — Mamba-1 selective scan over (L, D) inputs."""
+    if use_pallas:
+        return selective_scan_pallas(x, dt, A, B, C, D_skip, h0)
+    chunk = int(os.environ.get("REPRO_SCAN_CHUNK", "0"))
+    if chunk > 0 and x.shape[0] % chunk == 0:
+        return selective_scan_chunked(x, dt, A, B, C, D_skip, h0, chunk=chunk)
+    return selective_scan_ref(x, dt, A, B, C, D_skip, h0)
+
+
+__all__ = ["selective_scan"]

@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan.
+
+State update (diagonal A, per-channel state of size N):
+    h_t = exp(dt_t ⊗ A) * h_{t-1} + (dt_t * x_t) ⊗ B_t
+    y_t = h_t · C_t + D ⊙ x_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, A, B, C, D_skip, h0=None):
+    """Args:
+      x:  (L, D) input.
+      dt: (L, D) positive step sizes (already softplus'd).
+      A:  (D, N) negative-real diagonal state matrix (per channel).
+      B:  (L, N) input projection.
+      C:  (L, N) output projection.
+      D_skip: (D,) skip connection.
+      h0: (D, N) initial state (zeros if None).
+
+    Returns (y (L, D), h_final (D, N)).
+    """
+    L, Dm = x.shape
+    N = A.shape[1]
+    h0 = jnp.zeros((Dm, N), x.dtype) if h0 is None else h0
+
+    def step(h, inputs):
+        x_t, dt_t, B_t, C_t = inputs
+        dA = jnp.exp(dt_t[:, None] * A)              # (D, N)
+        dBx = (dt_t * x_t)[:, None] * B_t[None, :]   # (D, N)
+        h = dA * h + dBx
+        y_t = (h * C_t[None, :]).sum(-1) + D_skip * x_t
+        return h, y_t
+
+    h_final, y = jax.lax.scan(step, h0, (x, dt, B, C))
+    return y, h_final
+
+
+def selective_scan_chunked(x, dt, A, B, C, D_skip, h0=None, chunk: int = 64):
+    """Chunked associative formulation of the same recurrence — the TPU-
+    friendly path (beyond-paper optimization; see EXPERIMENTS.md §Perf).
+
+    The per-step scan above issues L sequential tiny ops; here the prefix
+    transforms (a, b) with ``h_t = a·h_{t-1} + b`` are composed by a
+    log-depth ``lax.associative_scan`` *within* each chunk (vectorized over
+    chunks), leaving only L/chunk sequential steps to thread the carry.
+    Decays stay in log space (``a = exp(z)``, z ≤ 0), so the cumulative
+    products are exp-of-sums — no divide-by-vanishing-prefix instability.
+
+    Exact same math as selective_scan_ref (associativity of affine maps);
+    validated against it in tests/test_kernels.py.
+    """
+    L, Dm = x.shape
+    N = A.shape[1]
+    h0 = jnp.zeros((Dm, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    assert L % chunk == 0, f"chunk {chunk} must divide L={L}"
+    nc = L // chunk
+    f32 = jnp.float32
+
+    z = dt.astype(f32)[:, :, None] * A.astype(f32)[None]          # (L, D, N)
+    b = (dt.astype(f32) * x.astype(f32))[:, :, None] * \
+        B.astype(f32)[:, None, :]                                  # (L, D, N)
+    # time-major within chunk, chunks batched: (Lc, nc, D, N)
+    zt = z.reshape(nc, chunk, Dm, N).transpose(1, 0, 2, 3)
+    bt = b.reshape(nc, chunk, Dm, N).transpose(1, 0, 2, 3)
+    Ct = C.astype(f32).reshape(nc, chunk, N).transpose(1, 0, 2)
+    xt = x.astype(f32).reshape(nc, chunk, Dm).transpose(1, 0, 2)
+
+    # pass 1 — all chunks in parallel from zero local state.  Emits the
+    # local output y_loc and the carry-correction factor E_t = exp(Σz)·C_t,
+    # so the only (L, D, N)-sized materialization is E.
+    def inner(carry, args):
+        h, zrun = carry
+        z_t, b_t, C_t, x_t = args
+        h = jnp.exp(z_t) * h + b_t
+        zrun = zrun + z_t
+        y_loc = (h * C_t[:, None, :]).sum(-1) + D_skip.astype(f32) * x_t
+        E_t = jnp.exp(zrun) * C_t[:, None, :]                      # (nc,D,N)
+        return (h, zrun), (y_loc, E_t)
+
+    zeros = jnp.zeros((nc, Dm, N), f32)
+    (h_last, z_sum), (y_local, E) = jax.lax.scan(
+        inner, (zeros, zeros), (zt, bt, Ct, xt))
+
+    # pass 2 — thread the carry across the nc chunk boundaries (tiny scan)
+    def carry_step(h_in, args):
+        z_s, h_l = args
+        return jnp.exp(z_s) * h_in + h_l, h_in
+
+    h_final, h_ins = jax.lax.scan(carry_step, h0, (z_sum, h_last))
+
+    # splice the inter-chunk carry into the outputs
+    y = y_local + jnp.einsum("tcdn,cdn->tcd", E, h_ins)
+    y = y.transpose(1, 0, 2).reshape(L, Dm)
+    return y.astype(x.dtype), h_final.astype(x.dtype)

@@ -1,0 +1,26 @@
+"""Public op for the RG-LRU recurrence (kernel, chunked, or oracle path).
+
+$REPRO_SCAN_CHUNK=<Lc> (trace-time) selects the chunk-transposed two-pass
+scan (same env gate as the mamba selective scan); 0/unset keeps the
+sequential reference.  The Pallas kernel is the hardware path on real TPUs.
+"""
+
+from __future__ import annotations
+
+import os
+
+from .kernel import rglru_scan_pallas
+from .ref import rglru_gates_ref, rglru_scan_chunked, rglru_scan_ref
+
+
+def rglru_scan(a, b, h0=None, use_pallas: bool = False):
+    """(y, h_final) — h_t = a_t ⊙ h_{t-1} + b_t over (L, D)."""
+    if use_pallas:
+        return rglru_scan_pallas(a, b, h0)
+    chunk = int(os.environ.get("REPRO_SCAN_CHUNK", "0"))
+    if chunk > 0 and a.shape[0] % chunk == 0:
+        return rglru_scan_chunked(a, b, h0, chunk=chunk)
+    return rglru_scan_ref(a, b, h0)
+
+
+__all__ = ["rglru_scan", "rglru_gates_ref"]

@@ -1,0 +1,51 @@
+"""jit'd public ops for ticket dispatch (kernel or oracle path).
+
+``use_pallas=False`` (default on CPU) routes to the pure-jnp oracle so the
+multi-pod dry-run lowers clean XLA; on TPU hardware flip it on.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ticket_dispatch_pallas
+from .ref import dispatch_ref, ticket_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "capacity", "use_pallas"))
+def assign_slots(expert_ids: jnp.ndarray, n_experts: int, capacity: int,
+                 use_pallas: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(tickets, slots) for MoE routing decisions; slot -1 = dropped."""
+    if use_pallas:
+        tickets = ticket_dispatch_pallas(expert_ids, n_experts)
+        slots = jnp.where(tickets < capacity, tickets, -1)
+        return tickets, slots
+    return dispatch_ref(expert_ids, n_experts, capacity)
+
+
+def dispatch_combine_plan(expert_ids: jnp.ndarray, gates: jnp.ndarray,
+                          n_experts: int, capacity: int,
+                          use_pallas: bool = False):
+    """Full dispatch plan for a gather/scatter MoE layer.
+
+    Args:
+      expert_ids: (N, K) top-k expert per token.
+      gates:      (N, K) routing weights (already normalized).
+    Returns dict with:
+      slot:      (N, K) position in expert buffer, -1 if dropped.
+      kept:      (N, K) bool.
+      gates:     (N, K) gates zeroed for dropped pairs.
+    """
+    _, slot = assign_slots(expert_ids, n_experts, capacity, use_pallas)
+    kept = slot >= 0
+    return {
+        "slot": slot,
+        "kept": kept,
+        "gates": jnp.where(kept, gates, 0.0),
+    }
+
+
+__all__ = ["assign_slots", "dispatch_combine_plan", "ticket_ref"]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for ticket dispatch (MoE slot assignment).
+
+Semantics — the ticket-lock doorway (paper Listing 1, line 35) adapted to
+TPU: every (token, k) routing decision "arrives" in token-major order and
+performs a conceptual ``FetchAdd(ticket[expert], 1)``.  On a TPU there are no
+cross-grid atomics, so the batch of arrivals is ticketed with an exclusive
+prefix count per expert — the associative-scan equivalent of fetch-and-add:
+deterministic, wait-free, and FIFO by construction (ticket order == arrival
+order, the paper's strict-FIFO admission property).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ticket_ref(expert_ids: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Assign each routing decision its ticket (position within its expert).
+
+    Args:
+      expert_ids: int32 (N,) or (T, K) expert assignment per arrival.
+      n_experts:  number of experts E.
+
+    Returns:
+      tickets, same shape as expert_ids: arrival's FIFO position among all
+      arrivals routed to the same expert.
+    """
+    shape = expert_ids.shape
+    flat = expert_ids.reshape(-1)
+    onehot = (flat[:, None] == jnp.arange(n_experts)[None, :]).astype(jnp.int32)
+    exclusive = jnp.cumsum(onehot, axis=0) - onehot
+    tickets = jnp.take_along_axis(exclusive, flat[:, None], axis=1)[:, 0]
+    return tickets.reshape(shape)
+
+
+def dispatch_ref(expert_ids: jnp.ndarray, n_experts: int,
+                 capacity: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Tickets + capacity-bounded slots (slot = -1 → dropped).
+
+    Like a bounded waiting room: arrivals whose ticket exceeds capacity are
+    turned away (MoE token dropping), FIFO-fairly — earliest arrivals keep
+    their slots, exactly the admission order a ticket lock guarantees.
+    """
+    tickets = ticket_ref(expert_ids, n_experts)
+    slots = jnp.where(tickets < capacity, tickets, -1)
+    return tickets, slots

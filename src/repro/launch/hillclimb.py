@@ -1,0 +1,142 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ must run before any jax import (same contract as dryrun.py)
+
+"""Perf hillclimb driver — run a named sharding/algorithm variant of one
+dry-run cell, re-lower, re-analyze, and print the three roofline terms next
+to the baseline.  Every iteration's before/after goes into EXPERIMENTS.md
+§Perf.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell granite_dp
+"""
+
+import argparse
+import json
+
+from repro.launch.dryrun import OUT_DIR, run_cell
+from repro.launch.roofline import roofline_cell
+
+# name -> (arch, shape, kwargs for run_cell)
+VARIANTS = {
+    # granite: kill TP collectives entirely — the model fits a chip, so the
+    # 'model' mesh axis becomes extra data parallelism (ZeRO over 'data').
+    "granite_dp": ("granite-moe-1b-a400m", "train_4k", {
+        "rules": {"__batch__": ("data", "model"), "vocab": None, "ffn": None,
+                  "heads": None, "kv_heads": None, "experts": None},
+    }),
+    # granite: DP with accum=1 (batch 16/dev) — trades activation memory for
+    # fewer FSDP re-gathers.
+    "granite_dp_a1": ("granite-moe-1b-a400m", "train_4k", {
+        "rules": {"__batch__": ("data", "model"), "vocab": None, "ffn": None,
+                  "heads": None, "kv_heads": None, "experts": None},
+        "accum": 1,
+    }),
+    # mistral: Megatron sequence parallelism at layer boundaries.
+    "mistral_sp": ("mistral-large-123b", "train_4k", {
+        "rules": {"__seq__": ("model",)},
+    }),
+    "mistral_sp_a8": ("mistral-large-123b", "train_4k", {
+        "rules": {"__seq__": ("model",)}, "accum": 8,
+    }),
+    "mistral_a8": ("mistral-large-123b", "train_4k", {"accum": 8}),
+    # mistral: grads born sharded -> reduce-scatter instead of all-reduce
+    "mistral_gradrs": ("mistral-large-123b", "train_4k", {
+        "constrain_grads": True,
+    }),
+    # falcon: chunked associative selective scan (env-gated in ref.py).
+    "falcon_chunk": ("falcon-mamba-7b", "train_4k", {
+        "env": {"REPRO_SCAN_CHUNK": "64"},
+    }),
+    "falcon_chunk128": ("falcon-mamba-7b", "train_4k", {
+        "env": {"REPRO_SCAN_CHUNK": "128"},
+    }),
+    "falcon_chunk_sp": ("falcon-mamba-7b", "train_4k", {
+        "env": {"REPRO_SCAN_CHUNK": "64"},
+        "rules": {"__seq__": ("model",)},
+    }),
+    # granite iter3: DP + no remat (activations at 1 row/device are cheaper
+    # than the recompute's extra param re-gathers + refwd traffic)
+    "granite_dp_nr": ("granite-moe-1b-a400m", "train_4k", {
+        "rules": {"__batch__": ("data", "model"), "vocab": None, "ffn": None,
+                  "heads": None, "kv_heads": None, "experts": None},
+        "accum": 1, "cfg_overrides": {"remat": "none"},
+    }),
+    # granite iter4: + tighter expert capacity
+    "granite_dp_nr_c1": ("granite-moe-1b-a400m", "train_4k", {
+        "rules": {"__batch__": ("data", "model"), "vocab": None, "ffn": None,
+                  "heads": None, "kv_heads": None, "experts": None},
+        "accum": 1,
+        "cfg_overrides": {"remat": "none", "capacity_factor": 1.0},
+    }),
+    # granite iter4: DP (remat full) + tighter expert capacity
+    "granite_dp_c1": ("granite-moe-1b-a400m", "train_4k", {
+        "rules": {"__batch__": ("data", "model"), "vocab": None, "ffn": None,
+                  "heads": None, "kv_heads": None, "experts": None},
+        "accum": 1, "cfg_overrides": {"capacity_factor": 1.0},
+    }),
+    "grok_dp_experts": ("grok-1-314b", "train_4k", {
+        "rules": {"experts": "model"},
+    }),
+    # recurrentgemma: chunk-transposed RG-LRU scan (same as falcon iter-2)
+    "rgemma_chunk": ("recurrentgemma-9b", "train_4k", {
+        "env": {"REPRO_SCAN_CHUNK": "64"},
+    }),
+    # grok: halve FSDP re-gathers (accum 16->8) + tighter expert capacity
+    "grok_tuned": ("grok-1-314b", "train_4k", {
+        "accum": 8, "cfg_overrides": {"capacity_factor": 1.0},
+    }),
+}
+
+
+def run_variant(name: str, multi_pod: bool = False) -> dict:
+    arch, shape, kw = VARIANTS[name]
+    kw = dict(kw)
+    for k, v in kw.pop("env", {}).items():
+        os.environ[k] = v
+    res = run_cell(arch, shape, multi_pod=multi_pod, tag=name, **kw)
+    for k in kw.get("env", {}):
+        os.environ.pop(k, None)
+    if res.get("status") != "ok":
+        raise SystemExit(f"variant {name} failed: {res}")
+    path = os.path.join(OUT_DIR, res["cell"] + ".json")
+    return roofline_cell(path)
+
+
+def compare(name: str) -> None:
+    arch, shape, _ = VARIANTS[name]
+    mesh = "pod16x16"
+    base_path = os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh}.json")
+    base = roofline_cell(base_path)
+    var = run_variant(name)
+
+    def fmt(r):
+        return (f"comp {r['compute_s']:8.3f}s  mem {r['memory_s']:8.3f}s  "
+                f"coll {r['collective_s']:8.3f}s  lat {r['latency_s']:7.3f}s  "
+                f"dom={r['dominant']:10s} "
+                f"bound {r['step_time_bound_s']:8.3f}s  "
+                f"roofline {r['roofline_fraction']:.4f}  "
+                f"mem/dev {r['memory_gib']:.1f} GiB")
+
+    print(f"baseline : {fmt(base)}")
+    print(f"{name:9s}: {fmt(var)}")
+    d = base["step_time_bound_s"] / max(var["step_time_bound_s"], 1e-12)
+    print(f"step-time bound speedup: {d:.2f}x")
+    print("variant coll breakdown:")
+    for k, v in list(var["coll_breakdown"].items())[:6]:
+        print(f"   {v/1e9:10.1f} GB  {k}")
+    print("variant mem breakdown:")
+    for k, v in list(var["mem_breakdown"].items())[:6]:
+        print(f"   {v/1e9:10.1f} GB  {k}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help=f"one of {sorted(VARIANTS)}")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    compare(args.cell)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell — the
+dry-run's weak-type-correct, shardable, allocation-free inputs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeCell
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    B, S = cell.global_batch, cell.seq_len
+    batch = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+    if cfg.frontend == "audio_frames":
+        batch["frames"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "vision_patches":
+        batch["vision_mask"] = sds((B, S), jnp.bool_)
+        batch["vision_embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        batch["positions"] = sds((3, B, S), jnp.int32)
+    return batch
+
+
+def prefill_input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    batch = train_input_specs(cfg, cell)
+    batch.pop("labels")
+    if cfg.frontend == "audio_frames":
+        batch.pop("tokens")
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """tokens + cache + position for one-token decode at context seq_len."""
+    from repro.models.model import init_cache
+    B, S = cell.global_batch, cell.seq_len
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, jnp.dtype(cfg.dtype)))
+    return {
+        "tokens": sds((B, 1), jnp.int32),
+        "pos": sds((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    if cell.kind == "train":
+        return train_input_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_input_specs(cfg, cell)
+    if cell.kind == "decode":
+        return decode_input_specs(cfg, cell)
+    raise ValueError(cell.kind)

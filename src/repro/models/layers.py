@@ -1,0 +1,499 @@
+"""Layer zoo: norms, RoPE/M-RoPE, GQA attention (global / sliding-window,
+softcap, KV-cache), gated MLP, MoE with ticket dispatch, Mamba-1 block,
+RG-LRU recurrent block.
+
+All functions are pure: (params, x, ...) -> y.  Shapes: x (B, S, D).
+Computation dtype follows x; softmax/logit reductions in float32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.mamba_scan.ops import selective_scan
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.ticket_dispatch.ops import dispatch_combine_plan
+
+
+# ---------------------------------------------------------------------------
+# Norms / positional
+# ---------------------------------------------------------------------------
+def rms_norm(scale, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _rope_angles(positions, dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float = 10000.0, sections: tuple = ()):
+    """Rotary embedding; x (B, S, H, hd).  positions (B, S) or, for M-RoPE,
+    (3, B, S) with `sections` giving the per-stream head_dim halves split
+    (Qwen2-VL: temporal/height/width)."""
+    hd = x.shape[-1]
+    if sections:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        cos_parts, sin_parts = [], []
+        for s, sec in enumerate(sections):
+            c, si = _rope_angles(positions[s], hd, theta)
+            cos_parts.append(c[..., sum(sections[:s]):sum(sections[:s + 1])])
+            sin_parts.append(si[..., sum(sections[:s]):sum(sections[:s + 1])])
+        cos = jnp.concatenate(cos_parts, -1)
+        sin = jnp.concatenate(sin_parts, -1)
+    else:
+        cos, sin = _rope_angles(positions, hd, theta)
+    cos = cos[:, :, None, :]  # (B, S, 1, hd/2)
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def _gqa_expand(k, n_heads):
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating KV groups."""
+    kv = k.shape[2]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def _attend(q, k, v, mask, cfg: ArchConfig):
+    """q (B, Sq, H, hd); k/v (B, Sk, H, hd); mask broadcastable (B,1,Sq,Sk)."""
+    scale = cfg.head_dim ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _causal_mask(sq, sk, offset=0):
+    """offset = (#cached tokens): query i attends keys <= i + offset."""
+    qi = jnp.arange(sq)[:, None] + offset
+    ki = jnp.arange(sk)[None, :]
+    return (ki <= qi)[None, None]
+
+
+Q_CHUNK = 1024  # query-chunk length for the memory-bounded attention path
+
+
+def _attend_chunked(q, k, v, cfg: ArchConfig, *, causal: bool,
+                    q_chunk: int = Q_CHUNK):
+    """Full attention with queries processed in chunks (lax.map), bounding
+    the live score tensor to (B, H, q_chunk, S) instead of (B, H, S, S).
+    Exact — each query row sees its full key range, so no running softmax
+    is needed.  FLOPs are unchanged; only peak memory drops."""
+    B, S, H, hd = q.shape
+    pad = (-S) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (S + pad) // q_chunk
+    qc = q.reshape(B, nc, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(nc, dtype=jnp.int32) * q_chunk
+    scale = cfg.head_dim ** -0.5
+    ki = jnp.arange(S)[None, None, None, :]
+
+    def one(args):
+        qi, start = args                        # (B, qc, H, hd), scalar
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qi, k).astype(jnp.float32)
+        scores = softcap(scores * scale, cfg.attn_softcap)
+        if causal:
+            qpos = (start + jnp.arange(q_chunk))[None, None, :, None]
+            scores = jnp.where(ki <= qpos, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    out = jax.lax.map(one, (qc, starts))        # (nc, B, qc, H, hd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, S + pad, H, hd)
+    return out[:, :S]
+
+
+def attention_full(p, x, cfg: ArchConfig, positions, *, causal=True):
+    """Full (global) attention over x (B, S, D).
+
+    Long sequences (S > 2·Q_CHUNK) take the chunked-query path so the live
+    score tensor stays O(q_chunk · S) — required for the 32k prefill cells.
+    """
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    kv_cache = (k, v)  # cache keeps KV heads un-expanded (GQA-compact)
+    k = _gqa_expand(k, cfg.n_heads)
+    v = _gqa_expand(v, cfg.n_heads)
+    if S > 2 * Q_CHUNK:
+        out = _attend_chunked(q, k, v, cfg, causal=causal)
+    else:
+        mask = _causal_mask(S, S) if causal else jnp.ones((1, 1, S, S), bool)
+        out = _attend(q, k, v, mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), kv_cache
+
+
+def attention_local(p, x, cfg: ArchConfig, positions):
+    """Sliding-window attention, chunked so cost is O(S · 2w), never S×S.
+
+    Chunk size = window w; each query chunk attends to itself + the previous
+    chunk under a banded causal mask (coverage ≥ w, ≤ 2w — standard chunked
+    local attention).
+    """
+    B, S, D = x.shape
+    w = min(cfg.window, S)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    kv_cache = (k, v)  # cache keeps KV heads un-expanded (GQA-compact)
+    k = _gqa_expand(k, cfg.n_heads)
+    v = _gqa_expand(v, cfg.n_heads)
+
+    if S <= w:  # degenerate: plain causal
+        out = _attend(q, k, v, _causal_mask(S, S), cfg)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), kv_cache
+
+    pad = (-S) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // w
+    H, hd = cfg.n_heads, cfg.head_dim
+
+    qc = q.reshape(B, nc, w, H, hd)
+    kc = k.reshape(B, nc, w, H, hd)
+    vc = v.reshape(B, nc, w, H, hd)
+    # keys for chunk i = chunks (i-1, i); chunk -1 is zeros (masked out)
+    k_prev = jnp.pad(kc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    v_prev = jnp.pad(vc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    kk = jnp.concatenate([k_prev, kc], axis=2)  # (B, nc, 2w, H, hd)
+    vv = jnp.concatenate([v_prev, vc], axis=2)
+
+    scale = hd ** -0.5
+    scores = jnp.einsum("bnqhd,bnkhd->bnhqk", qc, kk).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    qi = jnp.arange(w)[:, None] + w          # absolute pos within 2w span
+    ki = jnp.arange(2 * w)[None, :]
+    band = (ki <= qi) & (ki > qi - w)        # causal, width-w band
+    first = jnp.arange(nc)[:, None, None] == 0
+    valid = band[None] & ~(first & (ki < w)[None])   # chunk 0 has no prev
+    scores = jnp.where(valid[:, None], scores, -1e30)  # (nc,1,w,2w) over (b,n,h,q,k)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", probs, vv)
+    out = out.reshape(B, Sp, H, hd)[:, :S]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), kv_cache
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg: ArchConfig, *,
+                     window: int = 0):
+    """One-token decode against a KV cache.
+
+    x (B, 1, D); cache_k/v (B, S_ctx, KV, hd); pos scalar int (#tokens so
+    far).  window > 0 limits attention to the trailing `window` cache slots
+    (sliding-window layers) — masked, so the compiled shape stays static.
+    Returns (out, new_k_cache, new_v_cache).
+
+    GQA is computed with *grouped* einsums — the KV cache is never expanded
+    to H heads (a 12x memory blowup for e.g. mistral's 96H/8KV).
+
+    Cache layout (chosen from the ambient mesh):
+      * kv_heads divisible by the 'model' axis → cache kv-head-sharded;
+        attention is fully local per shard (classic TP decode).
+      * otherwise → cache *context*-sharded over 'model' (flash-decode
+        style): q is replicated across model shards (bytes are tiny at
+        decode), each shard attends its context slice, and XLA inserts the
+        small softmax-stat + partial-output all-reduces.  This is what lets
+        a 32k·128-lane cache fit HBM when KV heads can't shard.
+    """
+    from .shard_utils import constrain, mesh_axis_size
+
+    B, _, D = x.shape
+    S_ctx = cache_k.shape[1]
+    KV, H, hd = cfg.n_kv_heads, cfg.n_heads, cfg.head_dim
+    M = H // KV
+    per_lane = jnp.ndim(pos) == 1           # (B,) ragged lanes (serving)
+    pos_b = pos if per_lane else jnp.full((B,), pos, jnp.int32)
+    positions = pos_b[:, None]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions, (3,) + positions.shape[-2:]) \
+            if positions.ndim == 2 else positions
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta, cfg.mrope_sections)
+    # sliding-window layers use a ring buffer: slot = position mod cache
+    # length (for full-length caches slot == position, same code path)
+    slot_b = pos_b % S_ctx if window else pos_b
+    if per_lane:
+        dus = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0, 0)))
+        cache_k = dus(cache_k, k_new.astype(cache_k.dtype), slot_b)
+        cache_v = dus(cache_v, v_new.astype(cache_v.dtype), slot_b)
+    else:
+        slot = pos % S_ctx if window else pos
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0))
+    model_size = mesh_axis_size("model")
+    kv_sharded = model_size > 1 and KV % model_size == 0
+    if kv_sharded:
+        cache_k = constrain(cache_k, "batch", None, "model", None)
+        cache_v = constrain(cache_v, "batch", None, "model", None)
+    else:
+        cache_k = constrain(cache_k, "batch", "model", None, None)
+        cache_v = constrain(cache_v, "batch", "model", None, None)
+
+    qg = q.reshape(B, 1, KV, M, hd)
+    if not kv_sharded:
+        qg = constrain(qg, "batch", None, None, None, None)  # replicate heads
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqgmd,bsgd->bgmqs", qg,
+                        cache_k.astype(x.dtype)).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    ki = jnp.arange(S_ctx)[None, None, None, None, :]
+    pm = pos_b[:, None, None, None, None]
+    if window:
+        # ring cache (length <= window): every slot holds a position within
+        # the window once the ring has wrapped; before that, only slots up
+        # to the write position are live
+        mask = (ki <= pm) | (pm >= S_ctx)
+    else:
+        mask = ki <= pm
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgmqs,bsgd->bqgmd", probs, cache_v.astype(x.dtype))
+    out = out.reshape(B, 1, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp(p, x, cfg: ArchConfig):
+    """Gated MLP (SwiGLU/GeGLU)."""
+    h = _act(cfg.act)(jnp.einsum("bsd,df->bsf", x, p["wi"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["wg"])
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def moe(p, x, cfg: ArchConfig, use_pallas: bool = False,
+        groups: int | None = None):
+    """Mixture-of-experts with ticket-dispatch slot assignment.
+
+    The doorway (who gets a buffer slot, FIFO, capacity-bounded) is the
+    paper's fetch-and-add adapted to TPU (prefix-sum ticketing).  Returns
+    (y, aux_loss).
+
+    Dispatch is *group-wise* (GShard-style): tokens are split into `groups`
+    independent groups, each with its own per-expert capacity, so expert
+    buffers carry a leading group dim that stays sharded with the batch —
+    no global scatter, no cross-shard reduction inside the layer.  Default
+    groups = B (one group per sequence) for prefill/train; for one-token
+    decode (S == 1) a single global group keeps the FLOP overcompute at
+    capacity_factor instead of E·cap/K per token.
+
+    The buffers are built by an int32 slot→token scatter followed by a
+    D-wide *gather* (never a D-wide scatter-add): kept slots are unique by
+    construction (the ticket is a per-expert FIFO position), which is what
+    makes the cheap-scatter formulation sound.
+    """
+    from .shard_utils import constrain
+
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    G = groups if groups is not None else (B if S > 1 else 1)
+    N = (B * S) // G
+    flat = x.reshape(G, N, D)
+    # Pin the token groups to the batch axes: without this, the FSDP ('data')
+    # sharding of the expert weights' d_model dim propagates into the
+    # dispatch gathers and the partitioner falls back to full replication.
+    flat = constrain(flat, "batch", None, None)
+    logits = jnp.einsum("gnd,de->gne", flat, p["router"]).astype(jnp.float32)
+    gates_full = jax.nn.softmax(logits, axis=-1)
+    top_gates, top_ids = jax.lax.top_k(gates_full, K)          # (G, N, K)
+    top_gates = top_gates / jnp.maximum(top_gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch/GShard style), over all tokens
+    density = jnp.mean(jax.nn.one_hot(top_ids[..., 0], E), axis=(0, 1))
+    router_prob = jnp.mean(gates_full, axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(density * router_prob)
+
+    capacity = max(K, int(cfg.capacity_factor * N * K / E))
+    capacity = (capacity + 7) // 8 * 8                         # TPU-friendly
+    plan = jax.vmap(lambda ids, g: dispatch_combine_plan(
+        ids, g, E, capacity, use_pallas))(top_ids, top_gates.astype(x.dtype))
+    slot, kept, gates = plan["slot"], plan["kept"], plan["gates"]
+
+    # (token, k) pair -> flat buffer slot; dropped pairs -> overflow row
+    flat_idx = jnp.where(kept, top_ids * capacity + slot, E * capacity)
+
+    def _group_dispatch(flat_g, flat_idx_g):
+        """(N, D), (N, K) -> (E·cap, D) buffers via int-scatter + gather."""
+        pair_tok = jnp.arange(N * K, dtype=jnp.int32) // K
+        slot_tok = jnp.full((E * capacity + 1,), -1, jnp.int32)
+        slot_tok = slot_tok.at[flat_idx_g.reshape(-1)].set(pair_tok)
+        slot_tok = slot_tok[:-1]
+        valid = slot_tok >= 0
+        return jnp.where(valid[:, None],
+                         flat_g[jnp.maximum(slot_tok, 0)], 0)
+
+    buffers = jax.vmap(_group_dispatch)(flat, flat_idx)        # (G, E·cap, D)
+    buffers = constrain(buffers, "batch", None, None)
+    buffers = buffers.reshape(G, E, capacity, D)
+
+    h = _act(cfg.act)(jnp.einsum("gecd,edf->gecf", buffers, p["wi"]))
+    h = h * jnp.einsum("gecd,edf->gecf", buffers, p["wg"])
+    h = constrain(h, "batch", None, None, "model")
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"])             # (G, E, cap, D)
+
+    # combine: gather each kept pair's expert output, weight by gate
+    out_flat = out.reshape(G, E * capacity, D)
+    out_flat = constrain(out_flat, "batch", None, None)
+    safe_idx = jnp.minimum(flat_idx, E * capacity - 1)
+    gathered = jnp.take_along_axis(
+        out_flat, safe_idx.reshape(G, N * K, 1), axis=1)
+    gathered = gathered.reshape(G, N, K, D) * gates[..., None]
+    y = jnp.where(kept[..., None], gathered, 0).sum(axis=2)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block
+# ---------------------------------------------------------------------------
+def mamba_block(p, x, cfg: ArchConfig, use_pallas: bool = False):
+    """Mamba-1 mixer over (B, S, D); returns (y, (h_final, conv_tail))."""
+    B, S, D = x.shape
+    di, N, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])            # (B,S,2di)
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv1d, width ssm_conv: stacked shifted views
+    kw = cfg.ssm_conv
+    xpad = jnp.pad(xin, ((0, 0), (kw - 1, 0), (0, 0)))
+    shifted = jnp.stack([xpad[:, i:i + S, :] for i in range(kw)], axis=-1)
+    conv = jnp.einsum("bsdk,dk->bsd", shifted, p["conv_w"]) + p["conv_b"]
+    xin = jax.nn.silu(conv)
+
+    # input-dependent dt, B, C
+    proj = jnp.einsum("bsd,dk->bsk", xin, p["x_proj"])         # (B,S,dtr+2N)
+    dt_in, Bm, Cm = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsk,kd->bsd", dt_in, p["dt_proj"])
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (di, N)
+
+    def scan_one(args):
+        x_b, dt_b, B_b, C_b = args
+        return selective_scan(x_b, dt_b, A.astype(x_b.dtype), B_b, C_b,
+                              p["D_skip"], use_pallas=use_pallas)
+
+    y, h_final = jax.vmap(lambda a, b, c, d: scan_one((a, b, c, d)))(
+        xin, dt, Bm, Cm)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    conv_tail = xpad[:, S:, :] if kw == 1 else xpad[:, -(kw - 1):, :]
+    return out, (h_final, conv_tail)
+
+
+def mamba_decode(p, x, ssm_state, conv_state, cfg: ArchConfig):
+    """One-token mamba step. x (B,1,D); ssm_state (B,di,N);
+    conv_state (B, kw-1, di). Returns (y, new_ssm, new_conv)."""
+    B = x.shape[0]
+    di, N, dtr, kw = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    xz = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)                          # (B,1,di)
+    window = jnp.concatenate([conv_state, xin], axis=1)         # (B,kw,di)
+    conv = jnp.einsum("bkd,dk->bd", window, p["conv_w"]) + p["conv_b"]
+    xin1 = jax.nn.silu(conv)[:, None, :]                        # (B,1,di)
+    proj = jnp.einsum("bsd,dk->bsk", xin1, p["x_proj"])
+    dt_in, Bm, Cm = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsk,kd->bsd", dt_in, p["dt_proj"])
+                         + p["dt_bias"])[:, 0]                  # (B,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+    dA = jnp.exp(dt[..., None] * A[None])                       # (B,di,N)
+    dBx = (dt * xin1[:, 0])[..., None] * Bm[:, 0][:, None, :]
+    new_ssm = dA * ssm_state + dBx
+    y = (new_ssm * Cm[:, 0][:, None, :]).sum(-1) + p["D_skip"] * xin1[:, 0]
+    y = (y * jax.nn.silu(z[:, 0]))[:, None, :]
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, new_ssm, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+RGLRU_C = 8.0
+
+
+def rglru_block(p, x, cfg: ArchConfig, h0=None, use_pallas: bool = False):
+    """Griffin recurrent mixer: proj -> conv -> RG-LRU -> gate -> proj.
+    Returns (y, (h_final, conv_tail))."""
+    B, S, D = x.shape
+    w = cfg.lru_width
+    kw = cfg.conv_width
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"])                 # (B,S,w)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    xpad = jnp.pad(xb, ((0, 0), (kw - 1, 0), (0, 0)))
+    shifted = jnp.stack([xpad[:, i:i + S, :] for i in range(kw)], axis=-1)
+    conv = jnp.einsum("bswk,wk->bsw", shifted, p["conv_w"]) + p["conv_b"]
+
+    gates = jnp.einsum("bsw,wk->bsk", conv, p["w_rg"])          # (B,S,2w)
+    r, i = jnp.split(gates, 2, axis=-1)
+    a = jnp.exp(-RGLRU_C * jax.nn.softplus(p["lam"])[None, None]
+                * jax.nn.sigmoid(r.astype(jnp.float32))).astype(x.dtype)
+    gated = jax.nn.sigmoid(i) * conv
+    b = jnp.sqrt(jnp.maximum(1.0 - a.astype(jnp.float32) ** 2, 1e-12)
+                 ).astype(x.dtype) * gated
+
+    if h0 is None:
+        h0 = jnp.zeros((B, w), x.dtype)
+    y, h_final = jax.vmap(lambda av, bv, h: rglru_scan(av, bv, h,
+                                                       use_pallas=use_pallas))(
+        a, b, h0)
+    y = y * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    conv_tail = xpad[:, -(kw - 1):, :]
+    return out, (h_final, conv_tail)
+
+
+def rglru_decode(p, x, h, conv_state, cfg: ArchConfig):
+    """One-token RG-LRU step. h (B, w); conv_state (B, kw-1, w)."""
+    w, kw = cfg.lru_width, cfg.conv_width
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"])                 # (B,1,w)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    window = jnp.concatenate([conv_state, xb], axis=1)          # (B,kw,w)
+    conv = jnp.einsum("bkw,wk->bw", window, p["conv_w"]) + p["conv_b"]
+    gates = jnp.einsum("bw,wk->bk", conv, p["w_rg"])
+    r, i = jnp.split(gates, 2, axis=-1)
+    a = jnp.exp(-RGLRU_C * jax.nn.softplus(p["lam"])[None]
+                * jax.nn.sigmoid(r.astype(jnp.float32))).astype(x.dtype)
+    b = jnp.sqrt(jnp.maximum(1.0 - a.astype(jnp.float32) ** 2, 1e-12)
+                 ).astype(x.dtype) * (jax.nn.sigmoid(i) * conv)
+    h_new = a * h + b
+    y = (h_new * gate[:, 0])[:, None, :]
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    return out, h_new, window[:, 1:]

@@ -1,0 +1,486 @@
+"""Model builder: params init/spec, period-scanned forward, train loss,
+prefill and one-token decode with KV/SSM caches.
+
+Layer stacks are scanned over *periods* (one period = cfg.layer_pattern),
+with remainder layers applied unscanned — HLO size stays O(period), compile
+time stays O(1) in depth, and cost analysis multiplies by trip count.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from . import layers as L
+from .shard_utils import constrain
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# Param init + logical sharding axes (parallel pytrees)
+# ---------------------------------------------------------------------------
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _attn_layer_params(cfg: ArchConfig, key, moe_layer: bool):
+    d, H, KV, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.head_dim, cfg.d_ff)
+    k = jax.random.split(key, 10)
+    s = 0.02
+    p = {
+        "ln1": jnp.zeros((d,), _dtype(cfg)),
+        "ln2": jnp.zeros((d,), _dtype(cfg)),
+        "wq": jax.random.normal(k[0], (d, H, hd), _dtype(cfg)) * s,
+        "wk": jax.random.normal(k[1], (d, KV, hd), _dtype(cfg)) * s,
+        "wv": jax.random.normal(k[2], (d, KV, hd), _dtype(cfg)) * s,
+        "wo": jax.random.normal(k[3], (H, hd, d), _dtype(cfg)) * s,
+    }
+    if moe_layer:
+        E = cfg.n_experts
+        p["router"] = jax.random.normal(k[4], (d, E), _dtype(cfg)) * s
+        p["wi"] = jax.random.normal(k[5], (E, d, ff), _dtype(cfg)) * s
+        p["wg"] = jax.random.normal(k[6], (E, d, ff), _dtype(cfg)) * s
+        p["wo_mlp"] = jax.random.normal(k[7], (E, ff, d), _dtype(cfg)) * s
+    else:
+        p["wi"] = jax.random.normal(k[5], (d, ff), _dtype(cfg)) * s
+        p["wg"] = jax.random.normal(k[6], (d, ff), _dtype(cfg)) * s
+        p["wo_mlp"] = jax.random.normal(k[7], (ff, d), _dtype(cfg)) * s
+    return p
+
+
+def _attn_layer_specs(cfg: ArchConfig, moe_layer: bool):
+    p = {
+        "ln1": ("embed",), "ln2": ("embed",),
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if moe_layer:
+        p["router"] = ("embed", "experts")
+        p["wi"] = ("experts", "embed", "ffn")
+        p["wg"] = ("experts", "embed", "ffn")
+        p["wo_mlp"] = ("experts", "ffn", "embed")
+    else:
+        p["wi"] = ("embed", "ffn")
+        p["wg"] = ("embed", "ffn")
+        p["wo_mlp"] = ("ffn", "embed")
+    return p
+
+
+def _mamba_layer_params(cfg: ArchConfig, key):
+    d, di, N, dtr, kw = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                         cfg.dt_rank, cfg.ssm_conv)
+    k = jax.random.split(key, 6)
+    s = 0.02
+    return {
+        "ln1": jnp.zeros((d,), _dtype(cfg)),
+        "in_proj": jax.random.normal(k[0], (d, 2 * di), _dtype(cfg)) * s,
+        "conv_w": jax.random.normal(k[1], (di, kw), _dtype(cfg)) * s,
+        "conv_b": jnp.zeros((di,), _dtype(cfg)),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))),
+        "x_proj": jax.random.normal(k[2], (di, dtr + 2 * N), _dtype(cfg)) * s,
+        "dt_proj": jax.random.normal(k[3], (dtr, di), _dtype(cfg)) * s,
+        "dt_bias": jnp.full((di,), -4.6, _dtype(cfg)),  # softplus^-1(0.01)
+        "D_skip": jnp.ones((di,), _dtype(cfg)),
+        "out_proj": jax.random.normal(k[4], (di, d), _dtype(cfg)) * s,
+    }
+
+
+def _mamba_layer_specs(cfg: ArchConfig):
+    return {
+        "ln1": ("embed",),
+        "in_proj": ("embed", "inner"),
+        "conv_w": ("inner", None),
+        "conv_b": ("inner",),
+        "A_log": ("inner", None),
+        "x_proj": ("inner", None),
+        "dt_proj": (None, "inner"),
+        "dt_bias": ("inner",),
+        "D_skip": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+
+
+def _rglru_layer_params(cfg: ArchConfig, key):
+    d, w, kw, ff = cfg.d_model, cfg.lru_width, cfg.conv_width, cfg.d_ff
+    k = jax.random.split(key, 8)
+    s = 0.02
+    # Λ init so a^(1/c) spreads over (0.9, 0.999) as in Griffin
+    u = jax.random.uniform(k[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / L.RGLRU_C))
+    return {
+        "ln1": jnp.zeros((d,), _dtype(cfg)),
+        "ln2": jnp.zeros((d,), _dtype(cfg)),
+        "w_x": jax.random.normal(k[0], (d, w), _dtype(cfg)) * s,
+        "w_gate": jax.random.normal(k[1], (d, w), _dtype(cfg)) * s,
+        "conv_w": jax.random.normal(k[2], (w, kw), _dtype(cfg)) * s,
+        "conv_b": jnp.zeros((w,), _dtype(cfg)),
+        "w_rg": jax.random.normal(k[3], (w, 2 * w), _dtype(cfg)) * s,
+        "lam": lam,
+        "w_out": jax.random.normal(k[4], (w, d), _dtype(cfg)) * s,
+        "wi": jax.random.normal(k[6], (d, ff), _dtype(cfg)) * s,
+        "wg": jax.random.normal(k[7], (d, ff), _dtype(cfg)) * s,
+        "wo_mlp": jax.random.normal(k[0], (ff, d), _dtype(cfg)) * s,
+    }
+
+
+def _rglru_layer_specs(cfg: ArchConfig):
+    return {
+        "ln1": ("embed",), "ln2": ("embed",),
+        "w_x": ("embed", "lru"), "w_gate": ("embed", "lru"),
+        "conv_w": ("lru", None), "conv_b": ("lru",),
+        "w_rg": ("lru", None), "lam": ("lru",),
+        "w_out": ("lru", "embed"),
+        "wi": ("embed", "ffn"), "wg": ("embed", "ffn"),
+        "wo_mlp": ("ffn", "embed"),
+    }
+
+
+def _layer_params(kind: str, cfg: ArchConfig, key):
+    if kind in ("global", "local"):
+        return _attn_layer_params(cfg, key, moe_layer=cfg.n_experts > 0)
+    if kind == "mamba":
+        return _mamba_layer_params(cfg, key)
+    if kind == "rglru":
+        return _rglru_layer_params(cfg, key)
+    raise ValueError(kind)
+
+
+def _layer_specs(kind: str, cfg: ArchConfig):
+    if kind in ("global", "local"):
+        return _attn_layer_specs(cfg, moe_layer=cfg.n_experts > 0)
+    if kind == "mamba":
+        return _mamba_layer_specs(cfg)
+    if kind == "rglru":
+        return _rglru_layer_specs(cfg)
+    raise ValueError(kind)
+
+
+def init_params(cfg: ArchConfig, key) -> Pytree:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    np_, per = cfg.n_periods, cfg.period
+    stack = {}
+    for j, kind in enumerate(cfg.layer_pattern):
+        if np_ == 0:
+            continue
+        per_period = [_layer_params(kind, cfg, keys[i * per + j])
+                      for i in range(np_)]
+        stack[f"slot{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_period)
+    tail = [_layer_params(kind, cfg, keys[np_ * per + i])
+            for i, kind in enumerate(cfg.tail_kinds)]
+    params = {
+        "embed": jax.random.normal(keys[-1], (cfg.padded_vocab, cfg.d_model),
+                                   _dtype(cfg)) * 0.02,
+        "final_norm": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+        "stack": stack,
+        "tail": tail,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[-2], (cfg.d_model, cfg.padded_vocab), _dtype(cfg)) * 0.02
+    return params
+
+
+def param_specs(cfg: ArchConfig) -> Pytree:
+    """Logical-axis names, parallel to init_params output (stacked leaves
+    get a leading 'layers' axis)."""
+    stack = {}
+    for j, kind in enumerate(cfg.layer_pattern):
+        if cfg.n_periods == 0:
+            continue
+        spec = _layer_specs(kind, cfg)
+        stack[f"slot{j}"] = jax.tree.map(
+            lambda axes: ("layers",) + tuple(axes), spec,
+            is_leaf=lambda x: isinstance(x, tuple))
+    tail = [_layer_specs(kind, cfg) for kind in cfg.tail_kinds]
+    specs = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "stack": stack,
+        "tail": tail,
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ("embed", "vocab")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def apply_layer(kind: str, p, x, cfg: ArchConfig, positions,
+                use_pallas: bool = False):
+    """One layer; returns (x, aux_loss, cache_entry)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("global", "local"):
+        h = L.rms_norm(p["ln1"], x, cfg.rms_eps)
+        if kind == "global":
+            attn_out, kv = L.attention_full(p, h, cfg, positions,
+                                            causal=cfg.causal)
+        else:
+            attn_out, kv = L.attention_local(p, h, cfg, positions)
+        x = x + attn_out
+        h = L.rms_norm(p["ln2"], x, cfg.rms_eps)
+        if cfg.n_experts:
+            moe_out, aux = L.moe({k: p[k] for k in
+                                  ("router", "wi", "wg")} | {"wo": p["wo_mlp"]},
+                                 h, cfg, use_pallas)
+            x = x + moe_out
+        else:
+            x = x + L.mlp({"wi": p["wi"], "wg": p["wg"], "wo": p["wo_mlp"]},
+                          h, cfg)
+        ck, cv = kv
+        if kind == "local" and ck.shape[1] > cfg.window:
+            # ring-buffer layout: keep the last `window` keys at slots
+            # position % window (order-free under masked attention; RoPE
+            # is already baked in at the absolute positions)
+            S, W = ck.shape[1], cfg.window
+            idx = S - W + (jnp.arange(W) - S % W) % W
+            ck = jnp.take(ck, idx, axis=1)
+            cv = jnp.take(cv, idx, axis=1)
+        cache = {"k": ck, "v": cv}
+    elif kind == "mamba":
+        h = L.rms_norm(p["ln1"], x, cfg.rms_eps)
+        out, (ssm, conv) = L.mamba_block(p, h, cfg, use_pallas)
+        x = x + out
+        cache = {"ssm": ssm, "conv": conv}
+    elif kind == "rglru":
+        h = L.rms_norm(p["ln1"], x, cfg.rms_eps)
+        out, (hf, conv) = L.rglru_block(p, h, cfg, use_pallas=use_pallas)
+        x = x + out
+        h = L.rms_norm(p["ln2"], x, cfg.rms_eps)
+        x = x + L.mlp({"wi": p["wi"], "wg": p["wg"], "wo": p["wo_mlp"]},
+                      h, cfg)
+        cache = {"h": hf, "conv": conv}
+    else:
+        raise ValueError(kind)
+    return x, aux, cache
+
+
+def _remat_policy(cfg: ArchConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _mask_pad_logits(logits, cfg: ArchConfig):
+    """Mask the padded-vocab tail (padded_vocab > vocab) to -1e30 so the
+    softmax/argmax never selects a pad token.  Applied after softcap."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    return jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, logits, -1e30)
+
+
+def _embed_inputs(params, batch: dict, cfg: ArchConfig):
+    """Token/frontend embedding + positions.  Frontends are stubs: audio
+    frames / vision patch embeddings arrive precomputed (spec)."""
+    if cfg.frontend == "audio_frames":
+        x = batch["frames"].astype(_dtype(cfg))
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return x, positions
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens] * jnp.asarray(
+        np.sqrt(cfg.d_model), _dtype(cfg))
+    if cfg.frontend == "vision_patches":
+        x = jnp.where(batch["vision_mask"][..., None],
+                      batch["vision_embeds"].astype(x.dtype), x)
+        positions = batch["positions"]  # (3, B, S) M-RoPE streams
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return x, positions
+
+
+def forward(params, batch: dict, cfg: ArchConfig, *, use_pallas: bool = False,
+            collect_cache: bool = False):
+    """Full forward pass; returns (logits, aux_loss, cache or None)."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    x = constrain(x, "batch", "seq", None)
+
+    def period_body(x, period_params):
+        aux_p = jnp.zeros((), jnp.float32)
+        caches = {}
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, aux, cache = apply_layer(kind, period_params[f"slot{j}"], x,
+                                        cfg, positions, use_pallas)
+            aux_p = aux_p + aux
+            caches[f"slot{j}"] = cache
+        x = constrain(x, "batch", "seq", None)
+        return x, (aux_p, caches if collect_cache else None)
+
+    body = period_body
+    policy = _remat_policy(cfg)
+    if policy is not None:
+        body = jax.checkpoint(period_body, policy=policy)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    cache_stack = None
+    if cfg.n_periods > 0 and cfg.scan_layers:
+        x, (aux_ps, cache_stack) = jax.lax.scan(body, x, params["stack"])
+        aux_total = aux_total + aux_ps.sum()
+    elif cfg.n_periods > 0:
+        for i in range(cfg.n_periods):
+            pp = jax.tree.map(lambda a: a[i], params["stack"])
+            x, (aux_p, _) = body(x, pp)
+            aux_total = aux_total + aux_p
+
+    tail_caches = []
+    for p_tail, kind in zip(params["tail"], cfg.tail_kinds):
+        x, aux, cache = apply_layer(kind, p_tail, x, cfg, positions, use_pallas)
+        aux_total = aux_total + aux
+        tail_caches.append(cache)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    logits = L.softcap(logits, cfg.logit_softcap)
+    logits = _mask_pad_logits(logits, cfg)
+    logits = constrain(logits, "batch", None, "model")
+    cache = ({"stack": cache_stack, "tail": tail_caches}
+             if collect_cache else None)
+    return logits, aux_total, cache
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, *, use_pallas: bool = False):
+    """Next-token (or frame-label) cross entropy + MoE aux. Returns
+    (loss, metrics).  The softmax stays vocab-sharded: logsumexp reduces
+    over the 'model' axis; the label logit comes from a one-hot contraction
+    (partial-sum friendly) instead of a cross-shard gather."""
+    logits, aux, _ = forward(params, batch, cfg, use_pallas=use_pallas)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.padded_vocab, dtype=logits.dtype)
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - label_logit
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux,
+                  "tokens": mask.sum()}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch: dict, cfg: ArchConfig, *, use_pallas: bool = False):
+    """Encode the prompt; returns (last-position logits, cache)."""
+    logits, _, cache = forward(params, batch, cfg, use_pallas=use_pallas,
+                               collect_cache=True)
+    return logits[:, -1], cache
+
+
+def _decode_layer(kind: str, p, x, cache, pos, cfg: ArchConfig):
+    if kind in ("global", "local"):
+        h = L.rms_norm(p["ln1"], x, cfg.rms_eps)
+        window = cfg.window if kind == "local" else 0
+        out, k2, v2 = L.attention_decode(p, h, cache["k"], cache["v"], pos,
+                                         cfg, window=window)
+        x = x + out
+        h = L.rms_norm(p["ln2"], x, cfg.rms_eps)
+        if cfg.n_experts:
+            moe_out, _ = L.moe({k: p[k] for k in ("router", "wi", "wg")}
+                               | {"wo": p["wo_mlp"]}, h, cfg)
+            x = x + moe_out
+        else:
+            x = x + L.mlp({"wi": p["wi"], "wg": p["wg"], "wo": p["wo_mlp"]},
+                          h, cfg)
+        return x, {"k": k2, "v": v2}
+    if kind == "mamba":
+        h = L.rms_norm(p["ln1"], x, cfg.rms_eps)
+        out, ssm, conv = L.mamba_decode(p, h, cache["ssm"], cache["conv"], cfg)
+        return x + out, {"ssm": ssm, "conv": conv}
+    if kind == "rglru":
+        h = L.rms_norm(p["ln1"], x, cfg.rms_eps)
+        out, hf, conv = L.rglru_decode(p, h, cache["h"], cache["conv"], cfg)
+        x = x + out
+        h = L.rms_norm(p["ln2"], x, cfg.rms_eps)
+        x = x + L.mlp({"wi": p["wi"], "wg": p["wg"], "wo": p["wo_mlp"]},
+                      h, cfg)
+        return x, {"h": hf, "conv": conv}
+    raise ValueError(kind)
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    """One-token decode.  tokens (B, 1); pos scalar int32 (current length).
+    Returns (logits (B, V), new_cache)."""
+    x = params["embed"][tokens] * jnp.asarray(
+        np.sqrt(cfg.d_model), _dtype(cfg))
+
+    def period_body(x, inputs):
+        period_params, period_cache = inputs
+        new_caches = {}
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, new_c = _decode_layer(kind, period_params[f"slot{j}"], x,
+                                     period_cache[f"slot{j}"], pos, cfg)
+            new_caches[f"slot{j}"] = new_c
+        return x, new_caches
+
+    if cfg.n_periods > 0:
+        x, new_stack = jax.lax.scan(period_body, x,
+                                    (params["stack"], cache["stack"]))
+    else:
+        new_stack = cache["stack"]
+
+    new_tail = []
+    for p_tail, c_tail, kind in zip(params["tail"], cache["tail"],
+                                    cfg.tail_kinds):
+        x, new_c = _decode_layer(kind, p_tail, x, c_tail, pos, cfg)
+        new_tail.append(new_c)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    logits = L.softcap(logits, cfg.logit_softcap)
+    logits = _mask_pad_logits(logits, cfg)
+    return logits[:, 0], {"stack": new_stack, "tail": new_tail}
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_ctx: int, dtype=None) -> Pytree:
+    """Abstract-friendly cache initializer (zeros; shapes only under
+    jax.eval_shape)."""
+    dtype = dtype or _dtype(cfg)
+
+    def one(kind):
+        if kind in ("global", "local"):
+            # sliding-window layers keep a ring buffer of `window` slots
+            # (slot = position % window) — a 500k context costs them only
+            # window·KV·hd, not S_ctx·KV·hd
+            s_kv = min(s_ctx, cfg.window) if kind == "local" else s_ctx
+            kv = (batch, s_kv, cfg.n_kv_heads, cfg.head_dim)
+            return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+        if kind == "mamba":
+            return {"ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), dtype),
+                    "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                                      dtype)}
+        if kind == "rglru":
+            return {"h": jnp.zeros((batch, cfg.lru_width), dtype),
+                    "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                                       cfg.lru_width), dtype)}
+        raise ValueError(kind)
+
+    stack = {}
+    for j, kind in enumerate(cfg.layer_pattern):
+        if cfg.n_periods == 0:
+            continue
+        stack[f"slot{j}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape),
+            one(kind))
+    return {"stack": stack, "tail": [one(k) for k in cfg.tail_kinds]}

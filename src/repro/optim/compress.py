@@ -1,0 +1,43 @@
+"""int8 gradient compression with error feedback — for the slow inter-pod
+axis.  all_reduce(int8(g)) + residual carry; standard large-scale trick
+(1-bit Adam / PowerSGD family, simplest member)."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8 quantization; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Pytree, residual: Pytree) -> tuple[Pytree, Pytree, Pytree]:
+    """Quantize (grads + residual); returns (q_tree, scales, new_residual)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        back = dequantize_int8(q, s)
+        return q, s, x - back  # residual carries quantization error
+
+    out = jax.tree.map(one, grads, residual)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), pick(1), pick(2)
+
+
+def init_residual(params: Pytree) -> Pytree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

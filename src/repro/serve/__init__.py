@@ -1,0 +1,15 @@
+"""Serving layer: continuous batching with ticket-FIFO admission.
+
+The admission path is the paper's algorithm applied at the request level:
+arriving requests draw a ticket (FetchAdd doorway), the engine's `grant`
+counter advances as decode lanes free up, and waiting clients use TWA
+two-tier waiting — the immediate successors poll the grant counter, everyone
+else parks on hashed slots of the shared waiting array and is promoted FIFO.
+"""
+
+from .admission import TicketGate
+from .engine import Request, ServeEngine
+from .kv_cache import insert_prefill
+from .sampler import sample
+
+__all__ = ["TicketGate", "ServeEngine", "Request", "insert_prefill", "sample"]

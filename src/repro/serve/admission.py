@@ -1,0 +1,115 @@
+"""TicketGate — FIFO admission with TWA two-tier waiting (paper §2, applied
+to request admission).
+
+A counting-semaphore generalization of the ticket lock: up to ``lanes``
+tickets are admitted concurrently (``tx - grant < lanes``); the rest queue in
+strict FIFO order.  Waiting clients split into two tiers exactly as in the
+paper:
+
+* the next ``threshold`` tickets past the admitted window poll the hot
+  ``grant`` counter ("short-term" — the immediate successors);
+* everyone further back parks on a hashed slot of the shared
+  :class:`~repro.core.waiting_array.WaitingArray` and polls that, 10x
+  colder ("long-term").
+
+``advance()`` (called when a lane frees) increments ``grant`` first — the
+handover — and *then* notifies the slot of the ticket that just became a
+short-term waiter, off the admission critical path.  Poll telemetry
+(``grant_polls`` vs ``slot_polls``) exposes the hot-counter load that the
+paper's Figure 1 measures as the invalidation diameter.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core.atomics import AtomicU64
+from repro.core.waiting_array import WaitingArray, global_waiting_array
+
+SHORT_POLL_S = 0.0001
+LONG_POLL_S = 0.001
+
+
+class TicketGate:
+    def __init__(self, lanes: int, *, threshold: int = 1,
+                 waiting_array: WaitingArray | None = None,
+                 name: str = "serve", two_tier: bool = True) -> None:
+        assert lanes >= 1
+        self.lanes = lanes
+        self.threshold = threshold
+        self.two_tier = two_tier
+        self.tickets = AtomicU64(0)
+        self.grant = AtomicU64(0)
+        self.array = (waiting_array if waiting_array is not None
+                      else global_waiting_array())
+        self.lock_id = (hash(name) & 0x7FFFFFFF) << 7
+        # telemetry
+        self._tel = threading.Lock()
+        self.grant_polls = 0
+        self.slot_polls = 0
+        self.long_term_entries = 0
+
+    # -- doorway (wait-free FetchAdd, paper line 35) -------------------------
+    def draw(self) -> int:
+        return self.tickets.fetch_add(1)
+
+    def admitted(self, tx: int) -> bool:
+        return tx - self.grant.load() < self.lanes
+
+    def queue_depth(self) -> int:
+        """dx analogue: drawn-but-unadmitted tickets."""
+        return max(0, self.tickets.load() - self.grant.load() - self.lanes)
+
+    # -- waiting (two-tier, paper lines 41-61) --------------------------------
+    def _dx(self, tx: int) -> int:
+        """Distance to admission: 0 ⇒ admitted."""
+        return max(0, tx - self.grant.load() - (self.lanes - 1))
+
+    def wait(self, tx: int, timeout_s: float = 30.0) -> None:
+        deadline = time.monotonic() + timeout_s
+        dx = self._poll_grant(tx)
+        if dx == 0:
+            return
+        if self.two_tier and dx > self.threshold:
+            self._long_term_wait(tx, deadline)
+        while self._poll_grant(tx) > 0:
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"ticket {tx} not admitted in {timeout_s}s")
+            time.sleep(SHORT_POLL_S)
+
+    def _poll_grant(self, tx: int) -> int:
+        with self._tel:
+            self.grant_polls += 1
+        return self._dx(tx)
+
+    def _long_term_wait(self, tx: int, deadline: float) -> None:
+        with self._tel:
+            self.long_term_entries += 1
+        at = self.array.index_for(self.lock_id, tx)
+        while True:
+            u = self.array.load(at)
+            if self._poll_grant(tx) <= self.threshold:  # recheck (lost wakeup)
+                return
+            while self.array.load(at) == u:
+                with self._tel:
+                    self.slot_polls += 1
+                if time.monotonic() > deadline:
+                    return  # fall back to short-term; wait() re-checks
+                time.sleep(LONG_POLL_S)
+
+    # -- handover (paper lines 63-71) -----------------------------------------
+    def advance(self) -> int:
+        """A lane freed: admit the next ticket, then notify the long-term
+        waiter that just became a short-term one (after handover, off the
+        critical path)."""
+        k = self.grant.fetch_add(1) + 1
+        self.array.notify(self.lock_id, k + self.lanes - 1 + self.threshold)
+        return k
+
+    # -- telemetry -------------------------------------------------------------
+    def poll_stats(self) -> dict:
+        with self._tel:
+            return {"grant_polls": self.grant_polls,
+                    "slot_polls": self.slot_polls,
+                    "long_term_entries": self.long_term_entries}

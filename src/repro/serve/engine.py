@@ -1,0 +1,199 @@
+"""ServeEngine — continuous batching with ticket-FIFO admission.
+
+Decode lanes are the contended resource.  Requests draw a ticket on submit
+(wait-free doorway); the engine admits strictly in ticket order as lanes
+free up, advancing the grant counter through a :class:`TicketGate` whose
+two-tier waiting is the paper's TWA algorithm at request granularity.
+
+The model side is plain JAX: per-request prefill (bucketed prompt lengths to
+bound compilations), lane-packed KV/SSM caches, and a batched one-token
+decode step with per-lane positions.  Everything runs on CPU for the tests
+and examples; the same engine drives TPU meshes when params/caches carry
+shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import decode_step, forward, init_cache
+from .admission import TicketGate
+from .kv_cache import insert_prefill
+from .sampler import sample
+
+Pytree = Any
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int
+    eos_id: int = -1
+    ticket: int = -1
+    tokens_out: list = field(default_factory=list)
+    done: threading.Event = field(default_factory=threading.Event)
+    admitted_at_step: int = -1
+    finished_at_step: int = -1
+
+    @property
+    def text_ids(self) -> list:
+        return list(self.prompt) + list(self.tokens_out)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params: Pytree, *, lanes: int = 4,
+                 max_ctx: int = 256, pad_to: int = 16,
+                 temperature: float = 0.0, seed: int = 0,
+                 two_tier: bool = True, threshold: int = 1) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.lanes = lanes
+        self.max_ctx = max_ctx
+        # Recurrent-state archs can't take right-padded prompts (pads pollute
+        # the SSM/LRU state); they prefill at exact length.
+        recurrent = any(k in ("mamba", "rglru") for k in cfg.layer_pattern)
+        self.pad_to = 1 if recurrent else pad_to
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+
+        self.gate = TicketGate(lanes, two_tier=two_tier, threshold=threshold)
+        self._pending: dict[int, Request] = {}   # ticket -> request
+        self._mutex = threading.Lock()
+
+        self.cache = init_cache(cfg, lanes, max_ctx)
+        self.lane_req: list[Request | None] = [None] * lanes
+        self.lane_pos = np.zeros(lanes, np.int32)        # next write position
+        self.lane_last = np.zeros(lanes, np.int32)       # last sampled token
+        self.step_count = 0
+        self._prefill_jits: dict[int, Any] = {}
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg),
+            donate_argnums=(1,))
+
+    # -- client side -----------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 16, eos_id: int = -1) -> Request:
+        req = Request(rid=-1, prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+        req.ticket = self.gate.draw()
+        req.rid = req.ticket
+        with self._mutex:
+            self._pending[req.ticket] = req
+        return req
+
+    def wait(self, req: Request, timeout_s: float = 60.0) -> Request:
+        """Client-side blocking wait: two-tier wait for admission (the TWA
+        part), then block on completion."""
+        self.gate.wait(req.ticket, timeout_s=timeout_s)
+        req.done.wait(timeout_s)
+        return req
+
+    # -- engine side -------------------------------------------------------------
+    def _prefill_fn(self, padded_len: int):
+        if padded_len not in self._prefill_jits:
+            cfg = self.cfg
+
+            def fn(params, tokens, last_idx):
+                logits, _, cache = forward(params, {"tokens": tokens}, cfg,
+                                           collect_cache=True)
+                return logits[0, last_idx], cache
+
+            self._prefill_jits[padded_len] = jax.jit(fn)
+        return self._prefill_jits[padded_len]
+
+    def _admit(self, lane: int, req: Request) -> None:
+        L = len(req.prompt)
+        assert L + req.max_new_tokens <= self.max_ctx, "request exceeds context"
+        Lp = -(-L // self.pad_to) * self.pad_to
+        tokens = np.zeros((1, Lp), np.int32)
+        tokens[0, :L] = req.prompt
+        logits, new_cache = self._prefill_fn(Lp)(
+            self.params, jnp.asarray(tokens), L - 1)
+        self.cache = insert_prefill(self.cache, new_cache, jnp.int32(lane))
+        self._key, k = jax.random.split(self._key)
+        first = int(sample(logits[None], k, temperature=self.temperature)[0])
+        self.lane_req[lane] = req
+        self.lane_pos[lane] = L
+        self.lane_last[lane] = first
+        req.admitted_at_step = self.step_count
+        req.tokens_out.append(first)
+        self._finish_if_done(lane)
+
+    def _finish_if_done(self, lane: int) -> None:
+        req = self.lane_req[lane]
+        if req is None:
+            return
+        tok = req.tokens_out[-1] if req.tokens_out else -2
+        hit_eos = req.eos_id >= 0 and tok == req.eos_id
+        full = len(req.tokens_out) >= req.max_new_tokens
+        out_of_ctx = self.lane_pos[lane] + 1 >= self.max_ctx
+        if hit_eos or full or out_of_ctx:
+            req.finished_at_step = self.step_count
+            self.lane_req[lane] = None
+            req.done.set()
+            self.gate.advance()          # handover: next ticket admitted FIFO
+
+    def _next_ticket_waiting(self):
+        with self._mutex:
+            waiting = [t for t, r in self._pending.items()
+                       if r.admitted_at_step < 0]
+        return min(waiting) if waiting else None
+
+    def _fill_free_lanes(self) -> None:
+        for lane in range(self.lanes):
+            if self.lane_req[lane] is not None:
+                continue
+            t = self._next_ticket_waiting()
+            if t is None or not self.gate.admitted(t):
+                break
+            with self._mutex:
+                req = self._pending.pop(t)
+            req.admitted_at_step = self.step_count  # mark before prefill
+            self._admit(lane, req)
+
+    def _active(self) -> list:
+        return [l for l in range(self.lanes) if self.lane_req[l] is not None]
+
+    def step(self) -> int:
+        """Admit + one decode step across all lanes; returns #active lanes."""
+        self._fill_free_lanes()
+        active = self._active()
+        if not active:
+            return 0
+        tokens = jnp.asarray(self.lane_last[:, None])
+        pos = jnp.asarray(self.lane_pos)
+        logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
+        self._key, k = jax.random.split(self._key)
+        next_tok = np.asarray(sample(logits, k, temperature=self.temperature))
+        self.step_count += 1
+        for lane in active:
+            self.lane_pos[lane] += 1
+            self.lane_last[lane] = next_tok[lane]
+            self.lane_req[lane].tokens_out.append(int(next_tok[lane]))
+            self._finish_if_done(lane)
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        """Drive until all submitted requests complete."""
+        for _ in range(max_steps):
+            self._fill_free_lanes()
+            if not self._active():
+                with self._mutex:
+                    if not self._pending:
+                        return
+                continue
+            self.step()
+        raise RuntimeError("run() exceeded max_steps")
+
+    # -- stats -------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {"steps": self.step_count, **self.gate.poll_stats()}

@@ -1,0 +1,50 @@
+"""KV/SSM cache lane operations for continuous batching.
+
+The engine keeps one batch-wide cache pytree (lanes = batch rows).  A
+finished lane is re-used by writing the new request's prefill cache into its
+row; stale data past the new position is masked by the decode attention
+(``ki <= pos``), so no explicit clearing is needed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _insert_leaf(batch_leaf, new_leaf, lane, *, stacked: bool):
+    """DUS new_leaf (batch dim == 1) into row `lane` of batch_leaf.
+
+    stacked leaves: (periods, B, ...) — batch dim 1;
+    tail leaves:    (B, ...)          — batch dim 0.
+    """
+    bdim = 1 if stacked else 0
+    start = [0] * batch_leaf.ndim
+    start[bdim] = lane
+    return jax.lax.dynamic_update_slice(
+        batch_leaf, new_leaf.astype(batch_leaf.dtype),
+        tuple(jnp.int32(s) if isinstance(s, int) else s for s in start))
+
+
+def _walk(batch_cache, new_cache, fn_stacked, fn_tail):
+    out = {"stack": jax.tree.map(fn_stacked, batch_cache["stack"],
+                                 new_cache["stack"]),
+           "tail": jax.tree.map(fn_tail, batch_cache["tail"],
+                                new_cache["tail"])}
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=(), donate_argnums=(0,))
+def insert_prefill(batch_cache: Pytree, new_cache: Pytree,
+                   lane: jnp.ndarray) -> Pytree:
+    """Write a single-request prefill cache (B=1, seq Sp ≤ S_ctx) into the
+    given lane of the batch cache.  Jitted once per (Sp, structure)."""
+    return _walk(
+        batch_cache, new_cache,
+        lambda b, n: _insert_leaf(b, n, lane, stacked=True),
+        lambda b, n: _insert_leaf(b, n, lane, stacked=False))

@@ -1,0 +1,17 @@
+"""Token sampling for the decode loop."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0):
+    """logits (B, V) -> tokens (B,).  temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / temperature
+    if top_k:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -1e30, scaled)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)

@@ -1,0 +1,17 @@
+"""lockVM — JAX discrete-event simulator for the paper's lock algorithms."""
+
+from .costs import Costs, DEFAULT_COSTS
+from .engine import run_sim
+from .programs import (ACQUIRE_GEN, Layout, RELEASE_GEN, SIM_LOCKS,
+                       build_invalidation_diameter, build_mutexbench,
+                       init_state)
+from .workloads import (fig1_invalidation_diameter, fig2_interlock_interference,
+                        mutexbench_curve, run_contention)
+
+__all__ = [
+    "Costs", "DEFAULT_COSTS", "run_sim", "Layout", "SIM_LOCKS",
+    "build_mutexbench", "build_invalidation_diameter", "init_state",
+    "ACQUIRE_GEN", "RELEASE_GEN",
+    "fig1_invalidation_diameter", "fig2_interlock_interference",
+    "mutexbench_curve", "run_contention",
+]

@@ -1,0 +1,447 @@
+"""lockVM engine — jitted event-driven execution under a coherence cost model.
+
+Sequentially-consistent interleaving: a global virtual clock, one event per
+step.  Each thread owns an independent timeline (``next_time``); costs charge
+the *issuing* thread, so unrelated memory operations proceed in parallel —
+except that a store's visibility is delayed by its coherence cost (pending
+commit), which is precisely how the invalidation diameter retards handover.
+
+Event kinds:
+  * thread op  — fetch program[pc[t]], dispatch via lax.switch.
+  * commit     — a delayed store becomes globally visible: memory updated,
+                 sharers invalidated, spinners watching the line woken
+                 (they pay the refill miss and re-evaluate their condition).
+
+RMWs (FADD/SWAP/CASZ) apply immediately (the coherence controller serializes
+them) but charge full cost and wake watchers.  Loads register the thread as a
+line sharer; SPIN sleepers stay registered while parked — so every release
+store pays C_INV × (#threads camped on that line): ticket locks pay O(T),
+TWA pays O(LongTermThreshold). That asymmetry is the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+from .costs import (DEFAULT_COSTS, I_ATOMIC, I_HIT, I_INV, I_LOCAL, I_MISS,
+                    I_ST_OWNED, I_ST_SHARED, I_WAKE, I_XFER, Costs)
+
+INF = np.int32(1 << 29)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_engine(n_threads: int, mem_words: int, n_locks: int, prog_len: int,
+                  wa_base: int, wa_mask: int, wa_size: int):
+    """Compile an engine for a given shape set (program contents are inputs)."""
+
+    n_lines = mem_words // isa.WORDS_PER_SECTOR
+
+    def run(program, init_pc, init_regs, seed, horizon, max_events, costs):
+        C = costs  # (9,) int32
+
+        def load_cost(sharers, dirty, t, ln):
+            mine = sharers[ln, t]
+            d = dirty[ln]
+            return jnp.where(mine, C[I_HIT],
+                             jnp.where((d >= 0) & (d != t), C[I_XFER], C[I_MISS]))
+
+        def store_cost(sharers, dirty, t, ln, atomic):
+            row = sharers[ln]
+            others = row.sum() - row[t]
+            only = row[t] & (others == 0)
+            cost = jnp.where(only, C[I_ST_OWNED], C[I_ST_SHARED] + C[I_INV] * others)
+            return cost + jnp.where(atomic, C[I_ATOMIC], 0)
+
+        def wake_watchers(st, addr, at_time):
+            (next_time, spin_addr) = st
+            wake = spin_addr == addr
+            next_time = jnp.where(wake, at_time + C[I_WAKE], next_time)
+            spin_addr = jnp.where(wake, -1, spin_addr)
+            return next_time, spin_addr
+
+        def body(state):
+            (next_time, pc, regs, prng, mem, sharers, dirty,
+             pend_addr, pend_val, pend_time, spin_addr,
+             acq, waited_acq, rel_time, hand_sum, hand_cnt, events) = state
+
+            t = jnp.argmin(next_time)
+            t_th = next_time[t]
+            ptimes = jnp.where(pend_addr >= 0, pend_time, INF)
+            tc = jnp.argmin(ptimes)
+            t_cm = ptimes[tc]
+
+            def do_commit(_):
+                addr = pend_addr[tc]
+                ln = addr >> isa.LINE_SHIFT
+                mem2 = mem.at[addr].set(pend_val[tc])
+                sh2 = sharers.at[ln].set(jax.nn.one_hot(tc, n_threads, dtype=bool))
+                dr2 = dirty.at[ln].set(tc)
+                nt2, sp2 = wake_watchers((next_time, spin_addr), addr, t_cm)
+                pa2 = pend_addr.at[tc].set(-1)
+                return (nt2, pc, regs, prng, mem2, sh2, dr2,
+                        pa2, pend_val, pend_time, sp2,
+                        acq, waited_acq, rel_time, hand_sum, hand_cnt, events + 1)
+
+            def do_exec(_):
+                now = t_th
+                instr = program[pc[t]]
+                op, a, b, c, imm = instr[0], instr[1], instr[2], instr[3], instr[4]
+                ra, rb, rc = regs[t, a], regs[t, b], regs[t, c]
+
+                # Defaults each handler may override.
+                # handler returns: (cost, new_pc_t, regs_t_row, mem, sharers, dirty,
+                #                   pend triple, spin_addr, prng_t,
+                #                   acq, waited_acq, rel_time, hand_sum, hand_cnt,
+                #                   sleep_flag)
+                pc1 = pc[t] + 1
+
+                def h_nop():
+                    return (C[I_LOCAL], pc1, regs[t], mem, sharers, dirty,
+                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
+
+                def h_load():
+                    addr = rb + imm
+                    ln = addr >> isa.LINE_SHIFT
+                    cost = load_cost(sharers, dirty, t, ln)
+                    mine = sharers[ln, t]
+                    d = dirty[ln]
+                    sh2 = sharers.at[ln, t].set(True)
+                    dr2 = dirty.at[ln].set(jnp.where((~mine) & (d >= 0) & (d != t), -1, d))
+                    row = regs[t].at[a].set(mem[addr])
+                    return (cost, pc1, row, mem, sh2, dr2,
+                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
+
+                def _store_common(addr, val):
+                    ln = addr >> isa.LINE_SHIFT
+                    cost = store_cost(sharers, dirty, t, ln, False)
+                    pa = pend_addr.at[t].set(addr)
+                    pv = pend_val.at[t].set(val)
+                    pt = pend_time.at[t].set(now + cost)
+                    return cost, pa, pv, pt
+
+                def h_store():
+                    cost, pa, pv, pt = _store_common(ra + imm, rb)
+                    return (cost, pc1, regs[t], mem, sharers, dirty,
+                            pa, pv, pt, spin_addr, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
+
+                def h_storei():
+                    cost, pa, pv, pt = _store_common(ra + imm, b)
+                    return (cost, pc1, regs[t], mem, sharers, dirty,
+                            pa, pv, pt, spin_addr, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
+
+                def _rmw(addr, new_val, dst_old):
+                    """Immediate atomic RMW: apply, invalidate, wake watchers."""
+                    ln = addr >> isa.LINE_SHIFT
+                    cost = store_cost(sharers, dirty, t, ln, True)
+                    old = mem[addr]
+                    mem2 = mem.at[addr].set(new_val(old))
+                    sh2 = sharers.at[ln].set(jax.nn.one_hot(t, n_threads, dtype=bool))
+                    dr2 = dirty.at[ln].set(t)
+                    nt2, sp2 = wake_watchers((next_time, spin_addr), addr, now + cost)
+                    row = regs[t].at[dst_old].set(old)
+                    return cost, old, row, mem2, sh2, dr2, nt2, sp2
+
+                def h_fadd():
+                    cost, _, row, mem2, sh2, dr2, nt2, sp2 = _rmw(
+                        rb + imm, lambda old: old + c, a)
+                    return (cost, pc1, row, mem2, sh2, dr2,
+                            pend_addr, pend_val, pend_time, sp2, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False,
+                            nt2)
+
+                def h_swap():
+                    cost, _, row, mem2, sh2, dr2, nt2, sp2 = _rmw(
+                        rb + imm, lambda old: rc, a)
+                    return (cost, pc1, row, mem2, sh2, dr2,
+                            pend_addr, pend_val, pend_time, sp2, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False,
+                            nt2)
+
+                def h_casz():
+                    addr = rb + imm
+                    cost, old, row, mem2, sh2, dr2, nt2, sp2 = _rmw(
+                        addr, lambda old: jnp.where(old == rc, 0, old), a)
+                    return (cost, pc1, row, mem2, sh2, dr2,
+                            pend_addr, pend_val, pend_time, sp2, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False,
+                            nt2)
+
+                def _alu(value):
+                    row = regs[t].at[a].set(value)
+                    return (C[I_LOCAL], pc1, row, mem, sharers, dirty,
+                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
+
+                def h_addi():
+                    return _alu(rb + imm)
+
+                def h_movi():
+                    return _alu(imm)
+
+                def h_mov():
+                    return _alu(rb)
+
+                def h_sub():
+                    return _alu(rb - rc)
+
+                def h_muli():
+                    return _alu(rb * imm)
+
+                def h_andi():
+                    return _alu(rb & imm)
+
+                def h_hash():
+                    return _alu(wa_base + (((rb * 127) ^ rc) & wa_mask))
+
+                def h_hashp():
+                    return _alu(wa_base + rc * wa_size + ((rb * 127) & wa_mask))
+
+                def _branch(cond):
+                    new_pc = jnp.where(cond, imm, pc1)
+                    return (C[I_LOCAL], new_pc, regs[t], mem, sharers, dirty,
+                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
+
+                def h_beq():
+                    return _branch(ra == rb)
+
+                def h_bne():
+                    return _branch(ra != rb)
+
+                def h_ble():
+                    return _branch(ra <= rb)
+
+                def h_bgt():
+                    return _branch(ra > rb)
+
+                def h_beqi():
+                    return _branch(ra == c)
+
+                def h_bnei():
+                    return _branch(ra != c)
+
+                def h_blei():
+                    return _branch(ra <= c)
+
+                def h_bgti():
+                    return _branch(ra > c)
+
+                def h_jmp():
+                    return _branch(True)
+
+                def h_worki():
+                    return (jnp.maximum(imm, 1), pc1, regs[t], mem, sharers, dirty,
+                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
+
+                def h_workr():
+                    return (jnp.maximum(ra, 1), pc1, regs[t], mem, sharers, dirty,
+                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
+
+                def h_prng():
+                    s = prng[t] * jnp.uint32(1664525) + jnp.uint32(1013904223)
+                    val = ((s >> jnp.uint32(16)).astype(jnp.int32)) % jnp.maximum(imm, 1)
+                    row = regs[t].at[a].set(val)
+                    return (C[I_LOCAL], pc1, row, mem, sharers, dirty,
+                            pend_addr, pend_val, pend_time, spin_addr, s,
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
+
+                def _spin(proceed, addr):
+                    """Fused spin: proceed (load-hit cost) or park on the line."""
+                    ln = addr >> isa.LINE_SHIFT
+                    cost = load_cost(sharers, dirty, t, ln)
+                    sh2 = sharers.at[ln, t].set(True)  # camped on the line
+                    new_pc = jnp.where(proceed, pc1, pc[t])
+                    sp2 = jnp.where(proceed, spin_addr, spin_addr.at[t].set(addr))
+                    return (cost, new_pc, regs[t], mem, sh2, dirty,
+                            pend_addr, pend_val, pend_time, sp2, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt,
+                            ~proceed)
+
+                def h_spin_eq():
+                    addr = rb + imm
+                    return _spin(mem[addr] == ra, addr)
+
+                def h_spin_ne():
+                    addr = rb + imm
+                    return _spin(mem[addr] != ra, addr)
+
+                def h_spin_eqi():
+                    addr = rb + imm
+                    return _spin(mem[addr] == c, addr)
+
+                def h_spin_nei():
+                    addr = rb + imm
+                    return _spin(mem[addr] != c, addr)
+
+                def h_acq():
+                    lidx = ra
+                    rt = rel_time[lidx]
+                    waited = c > 0
+                    got = waited & (rt >= 0)
+                    hs = hand_sum + jnp.where(got, now - rt, 0)
+                    hc = hand_cnt + jnp.where(got, 1, 0)
+                    rel2 = rel_time.at[lidx].set(jnp.where(got, -1, rt))
+                    acq2 = acq.at[t].add(1)
+                    wacq2 = waited_acq.at[t].add(jnp.where(waited, 1, 0))
+                    return (C[I_LOCAL], pc1, regs[t], mem, sharers, dirty,
+                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
+                            acq2, wacq2, rel2, hs, hc, False)
+
+                def h_rel():
+                    lidx = rb
+                    rel2 = rel_time.at[lidx].set(now)
+                    return (C[I_LOCAL], pc1, regs[t], mem, sharers, dirty,
+                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
+                            acq, waited_acq, rel2, hand_sum, hand_cnt, False)
+
+                def h_halt():
+                    return (INF, pc[t], regs[t], mem, sharers, dirty,
+                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
+                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
+
+                # Handlers that rewrite next_time (RMW wakes) return 18 items;
+                # normalize others by appending the unchanged next_time.
+                def norm(h):
+                    def wrapped():
+                        out = h()
+                        if len(out) == 17:
+                            out = out + (next_time,)
+                        out = list(out)
+                        out[0] = jnp.asarray(out[0], jnp.int32)   # cost
+                        out[1] = jnp.asarray(out[1], jnp.int32)   # new pc
+                        out[16] = jnp.asarray(out[16], bool)      # sleep flag
+                        return tuple(out)
+                    return wrapped
+
+                handlers = [None] * isa.N_OPS
+                handlers[isa.NOP] = h_nop
+                handlers[isa.LOAD] = h_load
+                handlers[isa.STORE] = h_store
+                handlers[isa.STOREI] = h_storei
+                handlers[isa.FADD] = h_fadd
+                handlers[isa.SWAP] = h_swap
+                handlers[isa.CASZ] = h_casz
+                handlers[isa.ADDI] = h_addi
+                handlers[isa.MOVI] = h_movi
+                handlers[isa.MOV] = h_mov
+                handlers[isa.SUB] = h_sub
+                handlers[isa.MULI] = h_muli
+                handlers[isa.ANDI] = h_andi
+                handlers[isa.HASH] = h_hash
+                handlers[isa.HASHP] = h_hashp
+                handlers[isa.BEQ] = h_beq
+                handlers[isa.BNE] = h_bne
+                handlers[isa.BLE] = h_ble
+                handlers[isa.BGT] = h_bgt
+                handlers[isa.BEQI] = h_beqi
+                handlers[isa.BNEI] = h_bnei
+                handlers[isa.BLEI] = h_blei
+                handlers[isa.BGTI] = h_bgti
+                handlers[isa.JMP] = h_jmp
+                handlers[isa.WORKI] = h_worki
+                handlers[isa.WORKR] = h_workr
+                handlers[isa.PRNG] = h_prng
+                handlers[isa.SPIN_EQ] = h_spin_eq
+                handlers[isa.SPIN_NE] = h_spin_ne
+                handlers[isa.SPIN_EQI] = h_spin_eqi
+                handlers[isa.SPIN_NEI] = h_spin_nei
+                handlers[isa.ACQ] = h_acq
+                handlers[isa.REL] = h_rel
+                handlers[isa.HALT] = h_halt
+
+                (cost, new_pc_t, row, mem2, sh2, dr2,
+                 pa2, pv2, pt2, sp2, prng_t,
+                 acq2, wacq2, rel2, hs2, hc2, sleep, nt_base) = jax.lax.switch(
+                    op, [norm(h) for h in handlers])
+
+                nt2 = nt_base.at[t].set(
+                    jnp.where(sleep, INF, now + cost).astype(nt_base.dtype))
+                pc2 = pc.at[t].set(new_pc_t)
+                regs2 = regs.at[t].set(row)
+                prng2 = prng.at[t].set(prng_t)
+                return (nt2, pc2, regs2, prng2, mem2, sh2, dr2,
+                        pa2, pv2, pt2, sp2,
+                        acq2, wacq2, rel2, hs2, hc2, events + 1)
+
+            return jax.lax.cond(t_cm <= t_th, do_commit, do_exec, None)
+
+        def cond(state):
+            next_time = state[0]
+            pend_addr, pend_time = state[7], state[9]
+            events = state[16]
+            t_th = jnp.min(next_time)
+            t_cm = jnp.min(jnp.where(pend_addr >= 0, pend_time, INF))
+            return (events < max_events) & (jnp.minimum(t_th, t_cm) < horizon)
+
+        state0 = (
+            jnp.zeros(n_threads, jnp.int32),                    # next_time
+            init_pc.astype(jnp.int32),                          # pc
+            init_regs.astype(jnp.int32),                        # regs
+            (seed + jnp.arange(n_threads, dtype=jnp.uint32)     # prng
+             * jnp.uint32(2654435761)),
+            jnp.zeros(mem_words, jnp.int32),                    # mem
+            jnp.zeros((n_lines, n_threads), bool),              # sharers
+            jnp.full(n_lines, -1, jnp.int32),                   # dirty
+            jnp.full(n_threads, -1, jnp.int32),                 # pend_addr
+            jnp.zeros(n_threads, jnp.int32),                    # pend_val
+            jnp.zeros(n_threads, jnp.int32),                    # pend_time
+            jnp.full(n_threads, -1, jnp.int32),                 # spin_addr
+            jnp.zeros(n_threads, jnp.int32),                    # acq
+            jnp.zeros(n_threads, jnp.int32),                    # waited_acq
+            jnp.full(n_locks, -1, jnp.int32),                   # rel_time
+            jnp.zeros((), jnp.int32),                           # hand_sum
+            jnp.zeros((), jnp.int32),                           # hand_cnt
+            jnp.zeros((), jnp.int32),                           # events
+        )
+        final = jax.lax.while_loop(cond, body, state0)
+        return {
+            "acquisitions": final[11],
+            "waited_acquisitions": final[12],
+            "handover_sum": final[14],
+            "handover_count": final[15],
+            "events": final[16],
+            "sleeping": (final[10] >= 0).sum(),
+            "grant_value": final[4],  # full memory; callers slice what they need
+        }
+
+    return jax.jit(run, static_argnames=())
+
+
+def run_sim(program: np.ndarray, *, n_threads: int, mem_words: int,
+            n_locks: int, init_pc: np.ndarray, init_regs: np.ndarray,
+            wa_base: int, wa_size: int, horizon: int = 2_000_000,
+            max_events: int = 2_000_000, seed: int = 1,
+            costs: Costs = DEFAULT_COSTS) -> dict:
+    """Run a lockVM program; returns python-side stats."""
+    assert wa_size & (wa_size - 1) == 0
+    prog_len = 256
+    assert len(program) <= prog_len, f"program too long: {len(program)}"
+    if len(program) < prog_len:
+        pad = np.zeros((prog_len - len(program), 5), np.int32)
+        pad[:, 0] = isa.HALT
+        program = np.concatenate([program, pad])
+    engine = _build_engine(n_threads, mem_words, n_locks, prog_len,
+                           wa_base, wa_size - 1, wa_size)
+    out = engine(jnp.asarray(program), jnp.asarray(init_pc),
+                 jnp.asarray(init_regs), jnp.uint32(seed),
+                 jnp.int32(horizon), jnp.int32(max_events),
+                 jnp.asarray(costs.to_array()))
+    mem = np.asarray(out.pop("grant_value"))
+    res = {k: np.asarray(v) for k, v in out.items()}
+    res["mem"] = mem
+    res["horizon"] = horizon
+    res["throughput"] = float(res["acquisitions"].sum()) / horizon
+    hc = int(res["handover_count"])
+    res["avg_handover"] = float(res["handover_sum"]) / hc if hc else float("nan")
+    return res

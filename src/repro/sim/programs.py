@@ -1,0 +1,373 @@
+"""lockVM programs: lock algorithms (paper Listing 1 + appendix variants +
+MCS baseline) and contention workloads built around them.
+
+Memory map (words; one sector = 16 words = 128 modeled bytes):
+  [0 .. n_locks*LOCK_STRIDE)              lock regions (sector-aligned fields)
+  [node_base .. +n_threads*32)            MCS queue nodes (flag/next sectors)
+  [wa_base .. +wa_total)                  waiting array (shared or per-lock)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .isa import (ACQ, ADDI, ANDI, Asm, BEQ, BEQI, BGTI, BLEI, BNEI, CASZ,
+                  FADD, HALT, HASH, HASHP, JMP, LOAD, MCS_FLAG, MCS_NEXT,
+                  MCS_NODE_STRIDE, LOCK_STRIDE, MOV, MOVI, MULI, N_REGS,
+                  OFF_GRANT, OFF_LGRANT, OFF_PGRANTS, OFF_TAIL, OFF_TICKET,
+                  PRNG, REL, R_AT, R_DX, R_G, R_K, R_LIDX, R_LOCK, R_NODE,
+                  R_NX, R_T1, R_T2, R_TID, R_TX, R_U, R_V, R_W, R_Z, SPIN_EQ,
+                  SPIN_EQI, SPIN_NE, SPIN_NEI, STORE, STOREI, SUB, SWAP,
+                  WORDS_PER_SECTOR, WORKI, WORKR)
+
+LT_THRESHOLD = 1  # the paper's LongTermThreshold
+
+
+@dataclass
+class Layout:
+    n_threads: int
+    n_locks: int
+    wa_size: int = 4096
+    private_arrays: bool = False  # Fig-2 idealized per-lock arrays
+
+    @property
+    def node_base(self) -> int:
+        return self.n_locks * LOCK_STRIDE
+
+    @property
+    def wa_base(self) -> int:
+        base = self.node_base + self.n_threads * MCS_NODE_STRIDE
+        return (base + WORDS_PER_SECTOR - 1) // WORDS_PER_SECTOR * WORDS_PER_SECTOR
+
+    @property
+    def mem_words(self) -> int:
+        n_arrays = self.n_locks if self.private_arrays else 1
+        w = self.wa_base + self.wa_size * n_arrays
+        return (w + WORDS_PER_SECTOR - 1) // WORDS_PER_SECTOR * WORDS_PER_SECTOR
+
+
+# --------------------------------------------------------------------------
+# Lock code generators.  Each emits acquire code falling through to an ACQ
+# marker and release code; the workload wraps them in a loop.  `asm.emit`
+# order matches the paper's Listing 1.
+# --------------------------------------------------------------------------
+
+def _hash_op(layout: Layout):
+    """HASH for the shared array, HASHP (per-lock offset) for private arrays."""
+    return HASHP if layout.private_arrays else HASH
+
+
+def gen_ticket_acquire(asm: Asm, tag: str) -> None:
+    asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(BEQ, R_TX, R_G, 0, f"{tag}_fast")
+    asm.emit(SPIN_EQ, R_TX, R_LOCK, 0, OFF_GRANT)
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_ticket_release(asm: Asm, tag: str) -> None:
+    asm.emit(ADDI, R_K, R_TX, 0, 1)
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STORE, R_LOCK, R_K, 0, OFF_GRANT)  # non-atomic increment
+
+
+def gen_twa_acquire(asm: Asm, tag: str, layout: Layout) -> None:
+    asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BEQI, R_DX, 0, 0, f"{tag}_fast")
+    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    # long-term waiting via the waiting array
+    asm.emit(_hash_op(layout), R_AT, R_TX, R_LIDX if layout.private_arrays else R_LOCK)
+    asm.label(f"{tag}_lt")
+    asm.emit(LOAD, R_U, R_AT, 0, 0)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)   # recheck grant (races)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    asm.emit(SPIN_NE, R_U, R_AT, 0, 0)          # wait for slot to change
+    asm.emit(JMP, 0, 0, 0, f"{tag}_lt")
+    asm.label(f"{tag}_st")                       # short-term: classic spin
+    asm.emit(SPIN_EQ, R_TX, R_LOCK, 0, OFF_GRANT)
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_twa_release(asm: Asm, tag: str, layout: Layout) -> None:
+    asm.emit(ADDI, R_K, R_TX, 0, 1)
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STORE, R_LOCK, R_K, 0, OFF_GRANT)  # handover store FIRST
+    asm.emit(ADDI, R_T1, R_K, 0, LT_THRESHOLD)
+    asm.emit(_hash_op(layout), R_AT, R_T1, R_LIDX if layout.private_arrays else R_LOCK)
+    asm.emit(FADD, R_Z, R_AT, 1, 0)             # atomic notify (collisions)
+
+
+def gen_mcs_acquire(asm: Asm, tag: str) -> None:
+    asm.emit(STOREI, R_NODE, 1, 0, MCS_FLAG)    # locked = 1
+    asm.emit(STOREI, R_NODE, 0, 0, MCS_NEXT)    # next = null(0)
+    asm.emit(SWAP, R_T1, R_LOCK, R_NODE, OFF_TAIL)
+    asm.emit(BEQI, R_T1, 0, 0, f"{tag}_fast")
+    asm.emit(STORE, R_T1, R_NODE, 0, MCS_NEXT)  # pred.next = me
+    asm.emit(SPIN_EQI, 0, R_NODE, 0, MCS_FLAG)  # local spin on own flag
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_mcs_release(asm: Asm, tag: str) -> None:
+    asm.emit(LOAD, R_NX, R_NODE, 0, MCS_NEXT)
+    asm.emit(BNEI, R_NX, 0, 0, f"{tag}_succ")
+    asm.emit(CASZ, R_T1, R_LOCK, R_NODE, OFF_TAIL)   # try detach
+    asm.emit(BEQ, R_T1, R_NODE, 0, f"{tag}_done")
+    asm.emit(SPIN_NEI, 0, R_NODE, 0, MCS_NEXT)       # successor mid-enqueue
+    asm.emit(LOAD, R_NX, R_NODE, 0, MCS_NEXT)
+    asm.label(f"{tag}_succ")
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STORE, R_NX, R_Z, 0, MCS_FLAG)          # R_Z == 0 by convention
+    asm.label(f"{tag}_done")
+
+
+def gen_tkt_dual_acquire(asm: Asm, tag: str) -> None:
+    asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BEQI, R_DX, 0, 0, f"{tag}_fast")
+    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    asm.label(f"{tag}_lt")                       # long-term: spin on lgrant
+    asm.emit(LOAD, R_U, R_LOCK, 0, OFF_LGRANT)
+    asm.emit(SUB, R_DX, R_TX, R_U)
+    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    asm.emit(SPIN_NE, R_U, R_LOCK, 0, OFF_LGRANT)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_lt")
+    asm.label(f"{tag}_st")
+    asm.emit(SPIN_EQ, R_TX, R_LOCK, 0, OFF_GRANT)
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_tkt_dual_release(asm: Asm, tag: str) -> None:
+    asm.emit(ADDI, R_K, R_TX, 0, 1)
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STORE, R_LOCK, R_K, 0, OFF_GRANT)   # short-term handover first
+    asm.emit(STORE, R_LOCK, R_K, 0, OFF_LGRANT)  # then shift long-term
+
+
+def gen_twa_id_acquire(asm: Asm, tag: str, layout: Layout) -> None:
+    asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BEQI, R_DX, 0, 0, f"{tag}_fast")
+    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    asm.emit(_hash_op(layout), R_AT, R_TX, R_LIDX if layout.private_arrays else R_LOCK)
+    asm.emit(STORE, R_AT, R_T2, 0, 0)            # write identity (R_T2=tid+1)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)    # recheck
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    asm.emit(SPIN_NE, R_T2, R_AT, 0, 0)          # until slot != my identity
+    asm.label(f"{tag}_st")
+    asm.emit(SPIN_EQ, R_TX, R_LOCK, 0, OFF_GRANT)
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_twa_id_release(asm: Asm, tag: str, layout: Layout) -> None:
+    asm.emit(ADDI, R_K, R_TX, 0, 1)
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STORE, R_LOCK, R_K, 0, OFF_GRANT)
+    asm.emit(ADDI, R_T1, R_K, 0, LT_THRESHOLD)
+    asm.emit(_hash_op(layout), R_AT, R_T1, R_LIDX if layout.private_arrays else R_LOCK)
+    asm.emit(STORE, R_AT, R_Z, 0, 0)             # plain store of 0 — no RMW
+
+
+def gen_twa_staged_acquire(asm: Asm, tag: str, layout: Layout) -> None:
+    """TWA-Staged (appendix): (A) ≥3 away parks on the array; (B) 2 away
+    busy-waits on grant and, on reaching the front region, promotes the next
+    (A) thread itself; (C) the immediate successor spins on grant.  Unlock
+    never touches the array.
+
+    Liveness note (beyond the appendix's sketch): a thread can transition
+    (A)→owner-adjacent in one wakeup if two handovers land between its
+    notify and its recheck, skipping the (B) observation the appendix relies
+    on.  Every dx ≥ 2 entrant therefore performs the promotion exactly once
+    when it first observes dx ≤ 1 — over-notification is benign (spurious
+    recheck), a lost promotion deadlocks the chain.
+    """
+    asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BEQI, R_DX, 0, 0, f"{tag}_fast")
+    asm.emit(BLEI, R_DX, 0, 1, f"{tag}_c")           # (C): no duty
+    asm.emit(BLEI, R_DX, 0, 2, f"{tag}_b")           # (B): skip the park
+    # (A): long-term waiting, threshold 2
+    asm.emit(_hash_op(layout), R_AT, R_TX, R_LIDX if layout.private_arrays else R_LOCK)
+    asm.label(f"{tag}_lt")
+    asm.emit(LOAD, R_U, R_AT, 0, 0)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)        # recheck grant (races)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BLEI, R_DX, 0, 2, f"{tag}_b")
+    asm.emit(SPIN_NE, R_U, R_AT, 0, 0)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_lt")
+    asm.label(f"{tag}_b")                            # (B): wait for dx <= 1
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BLEI, R_DX, 0, 1, f"{tag}_promote")
+    asm.emit(SPIN_NE, R_G, R_LOCK, 0, OFF_GRANT)     # sleep till grant moves
+    asm.emit(JMP, 0, 0, 0, f"{tag}_b")
+    asm.label(f"{tag}_promote")                      # duty: wake (A) successor
+    asm.emit(ADDI, R_T1, R_TX, 0, 1)
+    asm.emit(_hash_op(layout), R_AT, R_T1, R_LIDX if layout.private_arrays else R_LOCK)
+    asm.emit(FADD, R_Z, R_AT, 1, 0)                  # atomic notify
+    asm.emit(MOVI, R_Z, 0, 0, 0)                     # restore R_Z == 0
+    asm.label(f"{tag}_c")                            # (C): classic spin
+    asm.emit(SPIN_EQ, R_TX, R_LOCK, 0, OFF_GRANT)
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def _emit_add(asm: Asm, dst: int, src_a: int, src_b: int) -> None:
+    """rd = ra + rb via two SUBs (the ISA has reg-reg SUB only; R_Z == 0)."""
+    asm.emit(SUB, R_V, R_Z, src_b)   # R_V = -src_b
+    asm.emit(SUB, dst, src_a, R_V)   # dst = a + b
+
+
+def gen_partitioned_acquire(asm: Asm, tag: str) -> None:
+    asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
+    asm.emit(ANDI, R_T1, R_TX, 0, 15)
+    asm.emit(MULI, R_T1, R_T1, 0, WORDS_PER_SECTOR)
+    _emit_add(asm, R_AT, R_LOCK, R_T1)
+    asm.emit(LOAD, R_G, R_AT, 0, OFF_PGRANTS)
+    asm.emit(BEQ, R_G, R_TX, 0, f"{tag}_fast")
+    asm.emit(SPIN_EQ, R_TX, R_AT, 0, OFF_PGRANTS)
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_partitioned_release(asm: Asm, tag: str) -> None:
+    asm.emit(ADDI, R_K, R_TX, 0, 1)
+    asm.emit(ANDI, R_T1, R_K, 0, 15)
+    asm.emit(MULI, R_T1, R_T1, 0, WORDS_PER_SECTOR)
+    _emit_add(asm, R_AT, R_LOCK, R_T1)
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STORE, R_AT, R_K, 0, OFF_PGRANTS)
+
+
+ACQUIRE_GEN = {
+    "ticket": lambda asm, tag, layout: gen_ticket_acquire(asm, tag),
+    "twa": gen_twa_acquire,
+    "mcs": lambda asm, tag, layout: gen_mcs_acquire(asm, tag),
+    "tkt-dual": lambda asm, tag, layout: gen_tkt_dual_acquire(asm, tag),
+    "twa-id": gen_twa_id_acquire,
+    "twa-staged": gen_twa_staged_acquire,
+    "partitioned": lambda asm, tag, layout: gen_partitioned_acquire(asm, tag),
+}
+
+RELEASE_GEN = {
+    "ticket": lambda asm, tag, layout: gen_ticket_release(asm, tag),
+    "twa": gen_twa_release,
+    "mcs": lambda asm, tag, layout: gen_mcs_release(asm, tag),
+    "tkt-dual": lambda asm, tag, layout: gen_tkt_dual_release(asm, tag),
+    "twa-id": gen_twa_id_release,
+    "twa-staged": lambda asm, tag, layout: gen_ticket_release(asm, tag),
+    "partitioned": lambda asm, tag, layout: gen_partitioned_release(asm, tag),
+}
+
+SIM_LOCKS = sorted(ACQUIRE_GEN)
+
+
+# --------------------------------------------------------------------------
+# Workload programs
+# --------------------------------------------------------------------------
+
+WORK_SCALE = 8  # cycles per PRNG step (mt19937 step ≈ a few ns on the X5-2);
+# calibrates CS/NCS durations relative to coherence costs so that "4 steps"
+# in the paper's benchmarks means ~32 cycles, not 4.
+
+
+def build_mutexbench(lock: str, layout: Layout, *, cs_work: int = 4,
+                     ncs_max: int = 200, cs_rand: tuple | None = None,
+                     work_scale: int = WORK_SCALE) -> np.ndarray:
+    """MutexBench (paper §4.2): loop { acquire; CS; release; NCS }.
+
+    Also covers throw (ncs_max=0, Fig 5), stress_latency (fixed work, Fig 7),
+    locktorture (cs=20, ncs∈{20,400}, Figs 11/12) and the RRC profile via
+    cs_rand=(lo, spread) (Fig 6).  CS/NCS are "PRNG steps" as in the paper,
+    charged at `work_scale` cycles per step.
+    """
+    asm = Asm()
+    asm.label("top")
+    if layout.n_locks > 1:
+        asm.emit(PRNG, R_LIDX, 0, 0, layout.n_locks)
+        asm.emit(MULI, R_LOCK, R_LIDX, 0, LOCK_STRIDE)
+    ACQUIRE_GEN[lock](asm, "a", layout)
+    if cs_rand is not None:
+        lo, spread = cs_rand
+        asm.emit(PRNG, R_W, 0, 0, max(spread, 1))
+        asm.emit(ADDI, R_W, R_W, 0, lo)
+        asm.emit(MULI, R_W, R_W, 0, work_scale)
+        asm.emit(WORKR, R_W, 0, 0, 0)
+    elif cs_work > 0:
+        asm.emit(WORKI, 0, 0, 0, cs_work * work_scale)
+    RELEASE_GEN[lock](asm, "r", layout)
+    if ncs_max > 0:
+        asm.emit(PRNG, R_W, 0, 0, ncs_max)
+        asm.emit(MULI, R_W, R_W, 0, work_scale)
+        asm.emit(WORKR, R_W, 0, 0, 0)
+    asm.emit(JMP, 0, 0, 0, "top")
+    return asm.finish()
+
+
+def build_invalidation_diameter() -> np.ndarray:
+    """Fig 1: one writer FADDs a word; readers re-fetch it after each change.
+
+    Thread 0 enters at pc=0 (writer); all others at the reader label.
+    """
+    asm = Asm()
+    asm.label("writer")
+    asm.emit(FADD, R_Z, R_LOCK, 1, 0)   # the shared word, sequestered
+    asm.emit(ACQ, R_LIDX, 0, 0)         # count writer ops via ACQ stats
+    asm.emit(JMP, 0, 0, 0, "writer")
+    asm.label("reader")
+    asm.emit(LOAD, R_V, R_LOCK, 0, 0)
+    asm.emit(SPIN_NE, R_V, R_LOCK, 0, 0)  # sleep till the word changes
+    asm.emit(JMP, 0, 0, 0, "reader")
+    return asm.finish(), asm.labels["reader"]
+
+
+def init_state(layout: Layout, program_entry_pc=0) -> tuple[np.ndarray, np.ndarray]:
+    """Initial pc and registers for every thread."""
+    T = layout.n_threads
+    pc = np.full(T, 0, np.int32)
+    if np.ndim(program_entry_pc) > 0:
+        pc = np.asarray(program_entry_pc, np.int32)
+    else:
+        pc[:] = program_entry_pc
+    regs = np.zeros((T, N_REGS), np.int32)
+    regs[:, R_TID] = np.arange(T)
+    regs[:, R_NODE] = layout.node_base + np.arange(T) * MCS_NODE_STRIDE
+    regs[:, R_LOCK] = 0         # single-lock default; multi-lock sets per-iter
+    regs[:, R_LIDX] = 0
+    regs[:, R_T2] = np.arange(T) + 1  # TWA-ID identity (non-zero)
+    regs[:, R_Z] = 0
+    return pc, regs

@@ -1,0 +1,87 @@
+"""Benchmark workloads on the lockVM, one per paper figure."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .costs import DEFAULT_COSTS, Costs
+from .engine import run_sim
+from .programs import (Layout, build_invalidation_diameter, build_mutexbench,
+                       init_state)
+
+DEFAULT_HORIZON = 1_500_000
+
+
+def run_contention(lock: str, n_threads: int, *, cs_work: int = 4,
+                   ncs_max: int = 200, cs_rand: tuple | None = None,
+                   n_locks: int = 1, private_arrays: bool = False,
+                   horizon: int = DEFAULT_HORIZON, seed: int = 1,
+                   costs: Costs = DEFAULT_COSTS, max_events: int = 2_000_000) -> dict:
+    """One MutexBench-style cell: throughput + handover stats."""
+    layout = Layout(n_threads=n_threads, n_locks=n_locks,
+                    private_arrays=private_arrays)
+    prog = build_mutexbench(lock, layout, cs_work=cs_work, ncs_max=ncs_max,
+                            cs_rand=cs_rand)
+    pc, regs = init_state(layout)
+    return run_sim(prog, n_threads=n_threads, mem_words=layout.mem_words,
+                   n_locks=n_locks, init_pc=pc, init_regs=regs,
+                   wa_base=layout.wa_base, wa_size=layout.wa_size,
+                   horizon=horizon, max_events=max_events, seed=seed,
+                   costs=costs)
+
+
+def median_throughput(lock: str, n_threads: int, *, runs: int = 3, **kw) -> float:
+    """Median over seeds (paper uses median of 5-7 runs)."""
+    vals = [run_contention(lock, n_threads, seed=s + 1, **kw)["throughput"]
+            for s in range(runs)]
+    return float(np.median(vals))
+
+
+def mutexbench_curve(locks=("ticket", "twa", "mcs"),
+                     threads=(1, 2, 4, 8, 16, 32, 64), *, runs: int = 3,
+                     **kw) -> dict[str, list[float]]:
+    """Fig 3: throughput vs thread count per lock algorithm."""
+    return {lock: [median_throughput(lock, t, runs=runs, **kw) for t in threads]
+            for lock in locks}
+
+
+def fig1_invalidation_diameter(reader_counts=(0, 1, 3, 7, 15, 31, 63),
+                               *, horizon: int = 300_000, seed: int = 1) -> list[float]:
+    """Fig 1: writer FADD throughput vs number of polling readers."""
+    out = []
+    prog_and_entry = build_invalidation_diameter()
+    prog, reader_pc = prog_and_entry
+    for readers in reader_counts:
+        T = readers + 1
+        layout = Layout(n_threads=T, n_locks=1)
+        entries = np.full(T, reader_pc, np.int32)
+        entries[0] = 0  # thread 0 is the writer
+        pc, regs = init_state(layout, entries)
+        res = run_sim(prog, n_threads=T, mem_words=layout.mem_words,
+                      n_locks=1, init_pc=pc, init_regs=regs,
+                      wa_base=layout.wa_base, wa_size=layout.wa_size,
+                      horizon=horizon, max_events=3_000_000, seed=seed)
+        out.append(float(res["acquisitions"][0]) / horizon)
+    return out
+
+
+def fig2_interlock_interference(pool_sizes=(1, 4, 16, 64, 256, 1024),
+                                *, n_threads: int = 64, runs: int = 3,
+                                horizon: int = 600_000) -> list[float]:
+    """Fig 2: shared-array TWA throughput / private-array TWA throughput.
+
+    The paper sweeps 1..8192 locks on real hardware; we sweep to 1024 (memory
+    for per-lock private arrays bounds the idealized variant).  <1.0 means
+    inter-lock collisions/false-sharing cost; paper's worst case is ~8%.
+    """
+    ratios = []
+    for n_locks in pool_sizes:
+        shared = np.median([run_contention(
+            "twa", n_threads, n_locks=n_locks, cs_work=50, ncs_max=100,
+            horizon=horizon, seed=s + 1)["throughput"] for s in range(runs)])
+        private = np.median([run_contention(
+            "twa", n_threads, n_locks=n_locks, cs_work=50, ncs_max=100,
+            private_arrays=True, horizon=horizon, seed=s + 1)["throughput"]
+            for s in range(runs)])
+        ratios.append(float(shared / private))
+    return ratios

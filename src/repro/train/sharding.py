@@ -1,0 +1,92 @@
+"""Logical-axis sharding rules (MaxText-style) → PartitionSpecs.
+
+Baseline layout on mesh ("data", "model") (+ optional leading "pod"):
+  * TP over 'model' for vocab/ffn/heads/inner/lru dims,
+  * FSDP (ZeRO-3) over 'data' for the d_model ('embed') dim of every weight
+    — params and fp32 Adam moments are 2-D sharded; XLA inserts the per-layer
+    all-gathers inside the period scan (gather-on-use overlaps with compute),
+  * batch over ('pod', 'data').
+Dims that don't divide their mesh axis fall back to replication (e.g. KV=8
+heads on model=16).  Rules are overridable per hillclimb variant.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+DEFAULT_RULES: dict[str, str | None] = {
+    "vocab": "model",
+    "ffn": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "inner": "model",
+    "lru": "model",
+    "embed": "data",     # FSDP
+    "experts": None,     # baseline: experts replicated, TP inside expert ffn
+    "layers": None,
+    "head_dim": None,
+}
+
+
+def spec_for_axes(axes: tuple, shape: tuple, mesh, rules) -> P:
+    """Logical axes + concrete shape -> PartitionSpec with divisibility
+    fallback (replicate any dim that doesn't divide its mesh axis).
+
+    A rule value may be a single mesh axis or a tuple of axes (e.g.
+    ("pod", "data") for the batch dim); missing/used axes are dropped from
+    the tuple before the divisibility check."""
+    entries = []
+    used = set()
+    for dim, name in zip(shape, axes):
+        mesh_axis = rules.get(name) if name else None
+        if mesh_axis is None:
+            entries.append(None)
+            continue
+        ax = (mesh_axis,) if isinstance(mesh_axis, str) else tuple(mesh_axis)
+        ax = tuple(a for a in ax if a in mesh.axis_names and a not in used)
+        size = 1
+        for a in ax:
+            size *= mesh.shape[a]
+        if ax and dim % size == 0:
+            entries.append(ax if len(ax) > 1 else ax[0])
+            used.update(ax)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_specs(spec_tree: Pytree, shape_tree: Pytree, mesh,
+               rules=None) -> Pytree:
+    """Map parallel (logical-axes, ShapeDtypeStruct) pytrees to PartitionSpecs."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    return jax.tree.map(
+        lambda axes, sds: spec_for_axes(axes, sds.shape, mesh, rules),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def batch_axes(mesh, axes=None) -> tuple:
+    if axes is not None:
+        return tuple(a for a in axes if a in mesh.axis_names)
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_spec(mesh, ndim: int, *, shard_batch: bool = True,
+               axes=None) -> P:
+    if not shard_batch:
+        return P()
+    return P(batch_axes(mesh, axes), *([None] * (ndim - 1)))
+
+
+def named(mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

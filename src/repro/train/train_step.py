@@ -1,0 +1,120 @@
+"""Train-step builder: gradient accumulation (scanned microbatches), remat
+via the model's period scan, sharding constraints at the batch boundary.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import loss_fn
+from repro.optim import AdamW, AdamWState
+
+Pytree = Any
+
+
+class TrainState(NamedTuple):
+    params: Pytree
+    opt: AdamWState
+
+
+@dataclass(frozen=True)
+class TrainOptions:
+    accum_steps: int = 1          # microbatch accumulation via lax.scan
+    accum_dtype: str = "float32"  # bf16 accumulator for HBM-bound giants
+    use_pallas: bool = False
+    shard_batch: bool = True
+    rules: dict | None = None     # logical-rule overrides (hillclimb)
+    constrain_grads: bool = False  # pin grads to the param sharding right
+    # after accumulation so XLA reduce-scatters partials instead of
+    # all-reducing them (grads are consumed sharded by the FSDP optimizer)
+
+
+def make_state(cfg: ArchConfig, optimizer: AdamW, key) -> TrainState:
+    from repro.models.model import init_params
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt=optimizer.init(params))
+
+
+def build_train_step(cfg: ArchConfig, optimizer: AdamW,
+                     options: TrainOptions = TrainOptions()):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch leaves have leading dim = global_batch; with accumulation the
+    batch is split into `accum_steps` microbatches scanned sequentially
+    (grads summed in fp32), bounding activation memory by the microbatch.
+    """
+    A = options.accum_steps
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb, cfg,
+                                   use_pallas=options.use_pallas)
+        if options.constrain_grads:
+            # Pin per-microbatch grads to the param sharding so the data-axis
+            # partial sums lower as reduce-scatter, not all-reduce (the
+            # accumulator and optimizer consume them sharded anyway).
+            grads = _constrain_like_params(grads, cfg, options.rules)
+        return grads, metrics
+
+    def _split_mb(x, B):
+        """Split the batch axis into (A, B//A); the batch axis is dim 0
+        except for M-RoPE 'positions' (3, B, S) where it is dim 1."""
+        ax = 0 if x.shape[0] == B else 1
+        shape = x.shape[:ax] + (A, x.shape[ax] // A) + x.shape[ax + 1:]
+        x = x.reshape(shape)
+        return jnp.moveaxis(x, ax, 0) if ax else x
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+        if A == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            B = batch["tokens"].shape[0]
+            split = jax.tree.map(lambda x: _split_mb(x, B), batch)
+
+            adt = jnp.dtype(options.accum_dtype)
+
+            def micro(carry, mb):
+                acc = carry
+                g, m = grads_of(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b.astype(adt), acc, g)
+                return acc, m
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            grads, ms = jax.lax.scan(micro, zero, split)
+            grads = jax.tree.map(lambda g: (g / A).astype(cfg.dtype), grads)
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, state.opt, params)
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def _constrain_like_params(grads, cfg: ArchConfig, rules):
+    """Pin each gradient leaf to the parameter sharding (trace-time no-op
+    without an ambient mesh)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return grads
+    from repro.models.model import param_specs
+    from repro.train.sharding import DEFAULT_RULES, spec_for_axes
+    merged = {**DEFAULT_RULES, **(rules or {})}
+    pspec = param_specs(cfg)
+
+    def con(axes, g):
+        return jax.lax.with_sharding_constraint(
+            g, spec_for_axes(tuple(axes), g.shape, mesh, merged))
+
+    return jax.tree.map(
+        con, pspec, grads,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

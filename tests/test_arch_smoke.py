@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step on
+CPU, asserting output shapes and absence of NaNs.  Full configs are exercised
+only via the dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, list_archs
+from repro.models.model import (decode_step, forward, init_cache, init_params,
+                                loss_fn, param_specs, prefill)
+
+B, S = 2, 64
+
+
+def make_batch(cfg, key, batch=B, seq=S):
+    ks = jax.random.split(key, 4)
+    batch_d = {
+        "tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab),
+    }
+    if cfg.frontend == "audio_frames":
+        batch_d["frames"] = jax.random.normal(ks[2], (batch, seq, cfg.d_model),
+                                              jnp.float32)
+    if cfg.frontend == "vision_patches":
+        mask = jnp.zeros((batch, seq), bool).at[:, :8].set(True)
+        batch_d["vision_mask"] = mask
+        batch_d["vision_embeds"] = jax.random.normal(
+            ks[2], (batch, seq, cfg.d_model), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(seq)[None], (batch, seq))
+        batch_d["positions"] = jnp.stack([pos, pos, pos])
+    return batch_d
+
+
+@pytest.fixture(scope="module")
+def rkey():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_shapes_and_finite(arch, rkey):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, rkey)
+    batch = make_batch(cfg, rkey)
+    logits, aux, _ = forward(params, batch, cfg)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_reduces_loss_direction(arch, rkey):
+    """One SGD step on the smoke config must produce finite grads that
+    change the loss."""
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, rkey)
+    batch = make_batch(cfg, rkey)
+
+    (loss0, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch, cfg)
+    assert np.isfinite(float(loss0))
+    assert float(metrics["tokens"]) == B * S
+    flat, _ = jax.tree.flatten(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat)
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+    lr = 0.1
+    params2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                           params, grads)
+    loss1, _ = loss_fn(params2, batch, cfg)
+    assert np.isfinite(float(loss1))
+    assert float(loss1) != float(loss0)
+
+
+@pytest.mark.parametrize("arch", [a for a in list_archs()
+                                  if ARCHS[a].has_decode])
+def test_prefill_then_decode(arch, rkey):
+    """Prefill a short prompt, then decode one token against a padded cache;
+    decode logits must be finite and cache shapes preserved."""
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, rkey)
+    s_ctx = S + 4
+    cache = init_cache(cfg, B, s_ctx, jnp.float32)
+    batch = make_batch(cfg, rkey)
+    last_logits, _ = prefill(params, batch, cfg)
+    assert last_logits.shape == (B, cfg.padded_vocab)
+
+    tok = jnp.argmax(last_logits, -1)[:, None].astype(jnp.int32)
+    logits, new_cache = decode_step(params, cache, tok, jnp.int32(S), cfg)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+    for a, b in zip(jax.tree.leaves(new_cache), jax.tree.leaves(cache)):
+        assert a.shape == b.shape
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_parallel_to_params(arch, rkey):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, rkey)
+    specs = param_specs(cfg)
+    pleaves = jax.tree.leaves(params)
+    sleaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(pleaves) == len(sleaves)
+    for p, s in zip(pleaves, sleaves):
+        assert p.ndim == len(s), (p.shape, s)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_count_analytic_close_to_actual(arch, rkey):
+    """Analytic 6ND param count must match materialized params within 2%
+    (validates the roofline's MODEL_FLOPS basis)."""
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, rkey)
+    actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    analytic = cfg.param_count()
+    assert abs(actual - analytic) / actual < 0.02, (actual, analytic)

@@ -1,0 +1,219 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode on CPU) + hypothesis property tests on ticketing invariants.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.mamba_scan.kernel import selective_scan_pallas
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+from repro.kernels.rglru.kernel import rglru_scan_pallas
+from repro.kernels.rglru.ref import rglru_gates_ref, rglru_scan_ref
+from repro.kernels.ticket_dispatch.kernel import ticket_dispatch_pallas
+from repro.kernels.ticket_dispatch.ops import assign_slots
+from repro.kernels.ticket_dispatch.ref import dispatch_ref, ticket_ref
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# ticket_dispatch
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape,n_experts,block_n", [
+    ((1,), 2, 8),
+    ((7,), 4, 8),
+    ((64,), 8, 32),
+    ((100, 2), 8, 64),
+    ((513, 8), 32, 256),
+    ((2048,), 64, 1024),
+    ((33, 3), 5, 16),        # non-power-of-two everything
+])
+def test_ticket_dispatch_matches_oracle(shape, n_experts, block_n):
+    ids = jnp.asarray(RNG.integers(0, n_experts, size=shape), jnp.int32)
+    got = ticket_dispatch_pallas(ids, n_experts, block_n=block_n)
+    want = ticket_ref(ids, n_experts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ticket_dispatch_single_expert_is_iota():
+    ids = jnp.zeros((50,), jnp.int32)
+    got = ticket_dispatch_pallas(ids, 1, block_n=16)
+    np.testing.assert_array_equal(np.asarray(got), np.arange(50))
+
+
+@given(n=st.integers(1, 300), e=st.integers(1, 16), seed=st.integers(0, 99))
+@settings(max_examples=20, deadline=None)
+def test_ticket_properties(n, e, seed):
+    """FIFO-doorway invariants: per-expert tickets are 0..count-1, dense,
+    and increase with arrival order (strict FIFO)."""
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, e, size=(n,)).astype(np.int32)
+    t = np.asarray(ticket_ref(jnp.asarray(ids), e))
+    for ex in range(e):
+        mine = t[ids == ex]
+        np.testing.assert_array_equal(np.sort(mine), np.arange(len(mine)))
+        np.testing.assert_array_equal(mine, np.sort(mine))  # arrival order
+
+
+def test_capacity_drop_is_fifo_fair():
+    """Only the latest arrivals are dropped — the earliest `capacity` per
+    expert always keep slots (the lock's FIFO admission property)."""
+    ids = jnp.asarray([0, 0, 0, 1, 0, 1, 0], jnp.int32)
+    tickets, slots = dispatch_ref(ids, 2, capacity=2)
+    np.testing.assert_array_equal(np.asarray(slots), [0, 1, -1, 0, -1, 1, -1])
+    _, slots2 = assign_slots(ids, 2, 2, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(slots2), np.asarray(slots))
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("L,D,N,l_chunk,dtype", [
+    (16, 8, 4, 8, jnp.float32),
+    (100, 96, 16, 32, jnp.float32),
+    (256, 128, 16, 64, jnp.float32),
+    (33, 20, 8, 16, jnp.float32),
+    (64, 64, 16, 32, jnp.bfloat16),
+])
+def test_mamba_scan_matches_oracle(L, D, N, l_chunk, dtype):
+    x = jnp.asarray(RNG.normal(size=(L, D)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(L, D)), dtype)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(D, N)), dtype)
+    B = jnp.asarray(RNG.normal(size=(L, N)), dtype)
+    C = jnp.asarray(RNG.normal(size=(L, N)), dtype)
+    Dsk = jnp.asarray(RNG.normal(size=(D,)), dtype)
+    y1, h1 = selective_scan_pallas(x, dt, A, B, C, Dsk, l_chunk=l_chunk)
+    y2, h2 = selective_scan_ref(x.astype(jnp.float32), dt.astype(jnp.float32),
+                                A.astype(jnp.float32), B.astype(jnp.float32),
+                                C.astype(jnp.float32), Dsk.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y1, np.float32), np.asarray(y2),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(h1, np.float32), np.asarray(h2),
+                               atol=tol, rtol=tol)
+
+
+def test_mamba_scan_initial_state_threading():
+    """h0 must thread through; two half-scans == one full scan."""
+    L, D, N = 64, 16, 8
+    args = (jnp.asarray(RNG.normal(size=(L, D)), jnp.float32),
+            jnp.asarray(RNG.uniform(0.01, 0.2, size=(L, D)), jnp.float32),
+            jnp.asarray(-RNG.uniform(0.5, 2.0, size=(D, N)), jnp.float32),
+            jnp.asarray(RNG.normal(size=(L, N)), jnp.float32),
+            jnp.asarray(RNG.normal(size=(L, N)), jnp.float32),
+            jnp.asarray(RNG.normal(size=(D,)), jnp.float32))
+    x, dt, A, B, C, Dsk = args
+    y_full, h_full = selective_scan_ref(x, dt, A, B, C, Dsk)
+    y_a, h_a = selective_scan_pallas(x[:32], dt[:32], A, B[:32], C[:32], Dsk,
+                                     l_chunk=16)
+    y_b, h_b = selective_scan_pallas(x[32:], dt[32:], A, B[32:], C[32:], Dsk,
+                                     h0=h_a, l_chunk=16)
+    np.testing.assert_allclose(np.concatenate([y_a, y_b]), np.asarray(y_full),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_b), np.asarray(h_full),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("L,D,l_chunk,dtype", [
+    (16, 8, 8, jnp.float32),
+    (100, 96, 32, jnp.float32),
+    (256, 256, 128, jnp.float32),
+    (33, 20, 16, jnp.float32),
+    (128, 64, 64, jnp.bfloat16),
+])
+def test_rglru_matches_oracle(L, D, l_chunk, dtype):
+    a = jnp.asarray(RNG.uniform(0.3, 0.999, size=(L, D)), dtype)
+    b = jnp.asarray(RNG.normal(size=(L, D)), dtype)
+    y1, h1 = rglru_scan_pallas(a, b, l_chunk=l_chunk)
+    y2, h2 = rglru_scan_ref(a.astype(jnp.float32), b.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y1, np.float32), np.asarray(y2),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(h1, np.float32), np.asarray(h2),
+                               atol=tol, rtol=tol)
+
+
+@given(L=st.integers(1, 80), D=st.integers(1, 40), seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_rglru_property_random_shapes(L, D, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.2, 0.99, size=(L, D)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(L, D)), jnp.float32)
+    y1, h1 = rglru_scan_pallas(a, b, l_chunk=32)
+    y2, h2 = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_rglru_gates_bounded():
+    L, D = 32, 16
+    x = jnp.asarray(RNG.normal(size=(L, D)), jnp.float32)
+    r = jnp.asarray(RNG.normal(size=(L, D)), jnp.float32)
+    i = jnp.asarray(RNG.normal(size=(L, D)), jnp.float32)
+    lam = jnp.asarray(RNG.normal(size=(D,)), jnp.float32)
+    a, b = rglru_gates_ref(x, r, i, lam)
+    assert (np.asarray(a) > 0).all() and (np.asarray(a) < 1).all()
+    y, h = rglru_scan_ref(a, b)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+# ---------------------------------------------------------------------------
+# chunked associative selective scan (beyond-paper optimization, §Perf)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk", [16, 32, 128])
+@pytest.mark.parametrize("L,D,N", [(256, 24, 8), (128, 16, 4)])
+def test_chunked_scan_matches_sequential(L, D, N, chunk):
+    from repro.kernels.mamba_scan.ref import (selective_scan_chunked,
+                                              selective_scan_ref)
+    if L % chunk:
+        pytest.skip("chunk must divide L")
+    rng = np.random.default_rng(L + chunk)
+    x = jnp.asarray(rng.normal(size=(L, D)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(L, D)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(D, N)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(L, N)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(L, N)), jnp.float32)
+    Dk = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(D, N)), jnp.float32)
+    y0, hf0 = selective_scan_ref(x, dt, A, B, C, Dk, h0)
+    y1, hf1 = selective_scan_chunked(x, dt, A, B, C, Dk, h0, chunk=chunk)
+    np.testing.assert_allclose(y0, y1, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(hf0, hf1, atol=1e-5, rtol=1e-5)
+
+
+def test_chunked_scan_gradients_match():
+    from repro.kernels.mamba_scan.ref import (selective_scan_chunked,
+                                              selective_scan_ref)
+    rng = np.random.default_rng(7)
+    L, D, N = 128, 8, 4
+    x = jnp.asarray(rng.normal(size=(L, D)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(L, D)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(D, N)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(L, N)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(L, N)), jnp.float32)
+    Dk = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+    g0 = jax.grad(lambda q: selective_scan_ref(q, dt, A, B, C, Dk)[0].sum())(x)
+    g1 = jax.grad(lambda q: selective_scan_chunked(
+        q, dt, A, B, C, Dk, chunk=32)[0].sum())(x)
+    np.testing.assert_allclose(g0, g1, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_rglru_chunked_matches_sequential(chunk):
+    from repro.kernels.rglru.ref import rglru_scan_chunked, rglru_scan_ref
+    rng = np.random.default_rng(chunk)
+    L, D = 128, 16
+    a = jnp.asarray(rng.uniform(0.7, 0.999, size=(L, D)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(L, D)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+    y0, hf0 = rglru_scan_ref(a, b, h0)
+    y1, hf1 = rglru_scan_chunked(a, b, h0, chunk=chunk)
+    np.testing.assert_allclose(y0, y1, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(hf0, hf1, atol=1e-5, rtol=1e-5)

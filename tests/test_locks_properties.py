@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) for TWA invariants."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import DEFAULT_ARRAY_SIZE, twa_hash
+from repro.core.atomics import AtomicU64
+from repro.core.complexity import cyclomatic, npath, table1
+from repro.core.hashing import SLOTS_PER_SECTOR, sector_of
+
+
+@given(lock_id=st.integers(0, 2**48), ticket=st.integers(0, 2**32),
+       log_size=st.integers(4, 16))
+def test_hash_in_range_and_deterministic(lock_id, ticket, log_size):
+    size = 1 << log_size
+    h1 = twa_hash(lock_id, ticket, size)
+    h2 = twa_hash(lock_id, ticket, size)
+    assert h1 == h2
+    assert 0 <= h1 < size
+
+
+@given(lock_id=st.integers(0, 2**48), ticket=st.integers(0, 2**32 - 2))
+def test_hash_adjacent_tickets_different_sectors(lock_id, ticket):
+    """Paper: adjacent ticket values map to different 128-byte sectors
+    (127 ≡ 15 mod 16 walks sectors), avoiding false sharing between the
+    next-to-be-promoted waiters."""
+    a = twa_hash(lock_id, ticket, DEFAULT_ARRAY_SIZE)
+    b = twa_hash(lock_id, ticket + 1, DEFAULT_ARRAY_SIZE)
+    assert sector_of(a) != sector_of(b)
+
+
+@given(lock_id=st.integers(0, 2**48))
+@settings(max_examples=25)
+def test_hash_equidistribution_over_window(lock_id):
+    """A window of ArraySize consecutive tickets covers every slot exactly
+    once: ×127 is a unit modulo 4096 (gcd(127, 4096)=1) — the Weyl property
+    the paper relies on for collision behavior matching the birthday bound."""
+    hits = {twa_hash(lock_id, t, DEFAULT_ARRAY_SIZE) for t in range(DEFAULT_ARRAY_SIZE)}
+    assert len(hits) == DEFAULT_ARRAY_SIZE
+
+
+@given(lock_a=st.integers(0, 2**24), lock_b=st.integers(0, 2**24))
+@settings(max_examples=50)
+def test_hash_decorrelates_entrained_locks(lock_a, lock_b):
+    """Lock ids differing in the masked-in address bits never collide on
+    EVERY ticket (entrainment).  Note: ids differing only above bit 12 are
+    masked out by `& (4096-1)` and DO entrain — a real property of the
+    paper's hash; allocators keep lock addresses diverse in low bits."""
+    la, lb = lock_a << 7, lock_b << 7  # sector-aligned pseudo-addresses
+    if (la ^ lb) & (DEFAULT_ARRAY_SIZE - 1) == 0:
+        return  # masked-equal addresses entrain by construction
+    collisions = sum(
+        twa_hash(la, t, DEFAULT_ARRAY_SIZE) == twa_hash(lb, t, DEFAULT_ARRAY_SIZE)
+        for t in range(256)
+    )
+    assert collisions < 256
+
+
+@given(start=st.integers(0, 2**64 - 1),
+       deltas=st.lists(st.integers(0, 2**16), max_size=50))
+def test_atomic_fetch_add_sequential_semantics(start, deltas):
+    cell = AtomicU64(start)
+    acc = start
+    for d in deltas:
+        old = cell.fetch_add(d)
+        assert old == acc & AtomicU64.MASK
+        acc += d
+    assert cell.load() == acc & AtomicU64.MASK
+
+
+@given(v=st.integers(0, 2**64 - 1), e=st.integers(0, 2**64 - 1),
+       n=st.integers(0, 2**64 - 1))
+def test_cas_semantics(v, e, n):
+    cell = AtomicU64(v)
+    observed = cell.compare_and_swap(e, n)
+    assert observed == v
+    assert cell.load() == (n if v == e else v)
+
+
+def test_complexity_table_matches_paper_ordering():
+    """Table 1's *ordering* claim: unlock complexity is 1 for all; TWA's lock
+    path is more complex than ticket but of the same small order (the paper's
+    contrast is TWA=6 vs qspinlock=18 cyclomatic)."""
+    rows = {r.algorithm: r for r in table1()}
+    # Table 1 covers ticket/qspinlock/TWA; MCS unlock is branchy by design.
+    for name in ("ticket", "twa"):
+        assert rows[name].cyclomatic_unlock == 1
+        assert rows[name].npath_unlock == 1
+    assert rows["ticket"].cyclomatic_lock == 2  # exactly the paper's value
+    assert rows["ticket"].cyclomatic_lock < rows["twa"].cyclomatic_lock <= 10
+    assert rows["ticket"].npath_lock < rows["twa"].npath_lock
+
+
+def test_cyclomatic_counts_decisions():
+    def f(x):
+        if x > 0:
+            while x:
+                x -= 1
+        return x
+
+    assert cyclomatic(f) == 3
+    assert npath(f) >= 3

@@ -1,0 +1,164 @@
+"""Real-thread tests for the host lock implementations (paper algorithms)."""
+
+import threading
+
+import pytest
+
+from repro.core import (
+    LOCK_CLASSES,
+    AndersonLock,
+    MCSLock,
+    TicketLock,
+    TWALock,
+    WaitingArray,
+    make_lock,
+)
+
+N_THREADS = 8
+ITERS = 200
+
+ALL_KINDS = sorted(LOCK_CLASSES)
+
+
+def _hammer(lock, n_threads=N_THREADS, iters=ITERS):
+    """n_threads × iters lock-protected increments; returns (counter, orders)."""
+    counter = {"v": 0}
+    admit_order = []
+    errors = []
+
+    def body():
+        try:
+            for _ in range(iters):
+                lock.acquire()
+                v = counter["v"]
+                # A data race here is what mutual exclusion must prevent.
+                counter["v"] = v + 1
+                admit_order.append(threading.get_ident())
+                lock.release()
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=body) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    return counter["v"], admit_order
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_mutual_exclusion(kind):
+    lock = make_lock(kind)
+    total, _ = _hammer(lock)
+    assert total == N_THREADS * ITERS
+
+
+@pytest.mark.parametrize("cls", [TicketLock, TWALock])
+def test_fifo_admission_order(cls):
+    """Ticket-based locks admit strictly in assigned-ticket order."""
+    lock = cls()
+    order = []
+    barrier = threading.Barrier(N_THREADS)
+
+    def body():
+        barrier.wait()
+        for _ in range(ITERS // 4):
+            tx = lock.acquire()
+            order.append(tx)
+            lock.release()
+
+    threads = [threading.Thread(target=body) for _ in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert order == sorted(order), "admission must follow ticket order"
+    assert order == list(range(len(order)))
+
+
+def test_twa_uses_long_term_waiting_under_contention():
+    """Deterministic pile-up: hold the lock while N waiters arrive; all but
+    the immediate successor must take the long-term (waiting-array) path."""
+    import time
+
+    lock = TWALock(waiting_array=WaitingArray(256))
+    lock.acquire()  # owner
+    n_waiters = 6
+    done = []
+
+    def waiter():
+        lock.acquire()
+        done.append(1)
+        lock.release()
+
+    threads = [threading.Thread(target=waiter) for _ in range(n_waiters)]
+    for t in threads:
+        t.start()
+    # Wait until every waiter has taken its ticket.
+    while lock.ticket.load() < n_waiters + 1:
+        time.sleep(0.001)
+    lock.release()
+    for t in threads:
+        t.join()
+    assert len(done) == n_waiters
+    # With threshold=1: exactly one short-term successor at arrival time,
+    # the rest saw dx > 1 and entered long-term waiting.
+    assert lock.long_term_entries >= n_waiters - 2
+    assert lock.array.notify_count == n_waiters + 1  # one notify per release
+
+
+def test_twa_fast_path_no_array_traffic():
+    """Uncontended TWA never touches the waiting array on acquire."""
+    arr = WaitingArray(256)
+    lock = TWALock(waiting_array=arr)
+    for _ in range(50):
+        lock.acquire()
+        lock.release()
+    assert lock.long_term_entries == 0
+    assert lock.short_term_entries == 0
+
+
+def test_twa_shared_array_between_locks():
+    """Two locks sharing one array (the paper's design) stay correct."""
+    arr = WaitingArray(64)  # tiny array -> frequent inter-lock collisions
+    locks = [TWALock(waiting_array=arr) for _ in range(4)]
+    counters = [0] * 4
+    state = {"counters": counters}
+
+    def body():
+        for i in range(100):
+            k = i % 4
+            locks[k].acquire()
+            state["counters"][k] += 1
+            locks[k].release()
+
+    threads = [threading.Thread(target=body) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert state["counters"] == [150] * 4
+
+
+def test_mcs_queue_node_reuse():
+    lock = MCSLock()
+    for _ in range(10):
+        with lock:
+            pass
+    assert not lock.locked()
+
+
+def test_anderson_bounded_threads():
+    lock = AndersonLock(max_threads=16)
+    total, _ = _hammer(lock, n_threads=4, iters=50)
+    assert total == 200
+
+
+def test_ticket_waiters_metric():
+    lock = TicketLock()
+    lock.acquire()
+    assert lock.waiters() == 0
+    assert lock.locked()
+    lock.release()
+    assert not lock.locked()

@@ -1,0 +1,112 @@
+"""Roofline HLO parser: trip-count multiplication, dot FLOPs, collective
+conventions, slice-aware memory accounting — on hand-written HLO snippets."""
+
+import pytest
+
+from repro.launch.roofline import (Analyzer, analyze_hlo_text, parse_hlo,
+                                   shape_bytes)
+
+HLO = """\
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups=[16,16]<=[256], to_apply=%add
+  %one = s32[] constant(1)
+  %iv2 = s32[] add(%iv, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%iv2, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(%iv, %n), direction=LT
+}
+
+ENTRY %main (x: f32[8,16]) -> (s32[], f32[8,16]) {
+  %x = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%z, %x)
+  ROOT %w = (s32[], f32[8,16]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"4"},"known_induction_variable":{"tuple_index":"0"}}
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert shape_bytes("bf16[4,4]") == 32
+    assert shape_bytes("(f32[2], s32[3])") == 8 + 12
+    assert shape_bytes("pred[10]") == 10
+
+
+def test_parse_structure():
+    comps, entry = parse_hlo(HLO)
+    assert entry == "main"
+    assert set(comps) >= {"main", "body", "cond", "add"}
+    assert comps["body"].root.opcode == "tuple"
+
+
+def test_trip_count_multiplication_and_dot_flops():
+    tot = analyze_hlo_text(HLO, n_devices=256)
+    # dot: 2 * (8*16) * 16 = 4096 flops, times 4 trips
+    assert tot["flops"] == pytest.approx(4 * 4096)
+    # all-reduce: 2 * 512B * 15/16 per trip, times 4
+    ar = 2 * (8 * 16 * 4) * 15 / 16
+    assert tot["coll_bytes"] == pytest.approx(4 * ar)
+    # latency: 4 while iterations + 4 collective launches
+    assert tot["seq_steps"] == 4 * (1 + 1)
+
+
+DUS_HLO = """\
+HloModule t2
+
+%fused_dus (p0: f32[64,128], p1: f32[1,128], p2: s32[]) -> f32[64,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %p1 = f32[1,128]{1,0} parameter(1)
+  %p2 = s32[] parameter(2)
+  %z = s32[] constant(0)
+  ROOT %d = f32[64,128]{1,0} dynamic-update-slice(%p0, %p1, %p2, %z)
+}
+
+ENTRY %main (buf: f32[64,128], upd: f32[1,128], i: s32[]) -> f32[64,128] {
+  %buf = f32[64,128]{1,0} parameter(0)
+  %upd = f32[1,128]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %f = f32[64,128]{1,0} fusion(%buf, %upd, %i), kind=kLoop, calls=%fused_dus
+}
+"""
+
+
+def test_dus_fusion_charged_at_update_granularity():
+    tot = analyze_hlo_text(DUS_HLO, n_devices=1)
+    # in-place DUS: ~2x update bytes (+ small), NOT the 32 KiB buffer
+    assert tot["bytes"] < 3 * (128 * 4) + 64
+    assert tot["bytes"] >= 2 * (128 * 4)
+
+
+GATHER_HLO = """\
+HloModule t3
+
+ENTRY %main (tbl: f32[50000,64], idx: s32[32,1]) -> f32[32,64] {
+  %tbl = f32[50000,64]{1,0} parameter(0)
+  %idx = s32[32,1]{1,0} parameter(1)
+  ROOT %g = f32[32,64]{1,0} gather(%tbl, %idx), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,64}
+}
+"""
+
+
+def test_gather_charged_at_slice_granularity():
+    tot = analyze_hlo_text(GATHER_HLO, n_devices=1)
+    # reads ~2x output + indices, not the 12.8 MB table
+    assert tot["bytes"] < 4 * (32 * 64 * 4) + (32 * 4)

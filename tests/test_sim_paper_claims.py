@@ -1,0 +1,151 @@
+"""lockVM validation against the paper's empirical claims (§4, Figs 1-3).
+
+Horizons are kept small for CI speed; the benchmarks/ modules run the full
+curves.  All claims are *shape/crossover* claims, as the simulator is
+calibrated to coherence-cost ratios, not to the X5-2's absolute ops/s.
+"""
+
+import numpy as np
+import pytest
+
+from repro.sim import fig1_invalidation_diameter, run_contention
+from repro.sim.isa import OFF_GRANT, OFF_TICKET
+from repro.sim.programs import Layout
+
+H = 800_000  # cycles
+
+
+def tput(lock, T, **kw):
+    return run_contention(lock, T, horizon=H, **kw)["throughput"]
+
+
+# ---------------------------------------------------------------------------
+# Figure 1 — invalidation diameter
+# ---------------------------------------------------------------------------
+def test_fig1_writer_slows_with_readers():
+    curve = fig1_invalidation_diameter(reader_counts=(0, 3, 15, 63),
+                                       horizon=150_000)
+    assert all(a > b for a, b in zip(curve, curve[1:])), curve
+    assert curve[0] > 5 * curve[-1]  # large dynamic range, as in the paper
+
+
+# ---------------------------------------------------------------------------
+# Figure 3 — MutexBench crossovers
+# ---------------------------------------------------------------------------
+def test_low_contention_ticket_best_twa_close():
+    """Paper: 'ticket locks perform the best up to 6 threads, with TWA
+    lagging slightly behind' and both beat MCS."""
+    for T in (1, 2, 4):
+        tk, tw, mc = tput("ticket", T), tput("twa", T), tput("mcs", T)
+        assert tk >= tw * 0.98, (T, tk, tw)   # ticket best (TWA within noise)
+        assert tw >= tk * 0.90, (T, tk, tw)   # TWA only slightly behind
+        # ticket above (or within noise of) MCS; strictly above at T=1 where
+        # lock-path cost dominates the iteration
+        if T == 1:
+            assert tk > mc, (T, tk, mc)
+        else:
+            assert tk >= mc * 0.97, (T, tk, mc)
+
+
+def test_high_contention_ticket_collapses_twa_wins():
+    """Paper: ticket fails to scale; MCS stable; TWA always >= MCS."""
+    tk16, tk64 = tput("ticket", 16), tput("ticket", 64)
+    tw16, tw64 = tput("twa", 16), tput("twa", 64)
+    mc16, mc64 = tput("mcs", 16), tput("mcs", 64)
+    assert tk64 < 0.5 * tk16          # ticket collapse
+    assert tw64 > 0.85 * tw16         # TWA stable asymptote
+    assert mc64 > 0.85 * mc16         # MCS stable asymptote
+    assert tw64 > 2.5 * tk64          # TWA >> ticket under contention
+    assert tw64 >= mc64               # TWA on par or beyond MCS
+    assert mc64 > tk64                # MCS surpasses ticket at high T
+
+
+def test_variants_ordering():
+    """Appendix: TKT-Dual better than ticket but behind TWA; TWA-ID viable."""
+    tk = tput("ticket", 48)
+    dual = tput("tkt-dual", 48)
+    tw = tput("twa", 48)
+    tid = tput("twa-id", 48)
+    assert dual > tk
+    assert tw > dual
+    assert tid > tk
+
+
+# ---------------------------------------------------------------------------
+# Handover latency — the mechanism behind the curves
+# ---------------------------------------------------------------------------
+def test_handover_scaling():
+    h_tk8 = run_contention("ticket", 8, horizon=H)["avg_handover"]
+    h_tk64 = run_contention("ticket", 64, horizon=H)["avg_handover"]
+    h_tw8 = run_contention("twa", 8, horizon=H)["avg_handover"]
+    h_tw64 = run_contention("twa", 64, horizon=H)["avg_handover"]
+    h_mc64 = run_contention("mcs", 64, horizon=H)["avg_handover"]
+    assert h_tk64 > 2.5 * h_tk8          # ticket handover grows ~linearly
+    assert h_tw64 < 1.3 * h_tw8          # TWA handover flat
+    assert h_tw64 < h_tk64 / 2           # TWA accelerates handover
+    assert h_tw64 < h_mc64 * 1.6         # TWA handover competitive with MCS
+
+
+# ---------------------------------------------------------------------------
+# Correctness invariants inside the simulation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("lock", ["ticket", "twa", "mcs", "tkt-dual",
+                                  "twa-id", "partitioned"])
+def test_conservation_and_progress(lock):
+    res = run_contention(lock, 16, horizon=H)
+    acq = res["acquisitions"]
+    assert acq.sum() > 0
+    assert acq.min() > 0                      # every thread made progress
+    # FIFO admission ⇒ per-thread counts balanced (up to NCS randomness).
+    assert acq.min() >= 0.9 * acq.max(), acq
+    if lock in ("ticket", "twa", "tkt-dual", "twa-id", "partitioned"):
+        if lock == "partitioned":  # grant lives in the per-sector slots
+            grant = res["mem"][64:64 + 16 * 16:16].max()
+        else:
+            grant = res["mem"][OFF_GRANT]
+        ticket = res["mem"][OFF_TICKET]
+        # every acquisition got a unique ticket; at most one holder in flight
+        assert 0 <= acq.sum() - grant <= 1
+        assert ticket >= acq.sum()
+
+
+def test_twa_waiting_array_accounting():
+    res = run_contention("twa", 16, horizon=H)
+    layout = Layout(n_threads=16, n_locks=1)
+    wa = res["mem"][layout.wa_base:layout.wa_base + layout.wa_size]
+    grant = res["mem"][OFF_GRANT]
+    # one atomic notify per release, hash-scattered over the array
+    assert wa.sum() == grant
+    assert (wa > 0).sum() > 32  # scattered, not piled on one slot
+
+
+def test_determinism_and_seed_stability():
+    a = run_contention("twa", 8, horizon=300_000, seed=7)
+    b = run_contention("twa", 8, horizon=300_000, seed=7)
+    assert a["throughput"] == b["throughput"]
+    assert np.array_equal(a["acquisitions"], b["acquisitions"])
+    c = run_contention("twa", 8, horizon=300_000, seed=8)
+    assert abs(c["throughput"] - a["throughput"]) / a["throughput"] < 0.15
+
+
+# ---------------------------------------------------------------------------
+# Figure 2 — inter-lock interference (shared vs private arrays)
+# ---------------------------------------------------------------------------
+def test_interlock_interference_bounded():
+    """Paper: worst-case penalty from sharing the array is < 8%; we allow
+    15% headroom for the simulator's harsher collision accounting."""
+    for n_locks in (4, 64):
+        shared = tput("twa", 32, n_locks=n_locks, cs_work=50, ncs_max=100)
+        private = tput("twa", 32, n_locks=n_locks, cs_work=50, ncs_max=100,
+                       private_arrays=True)
+        assert shared >= 0.85 * private, (n_locks, shared, private)
+
+
+def test_twa_staged_appendix_ordering():
+    """Appendix 6: TWA-Staged scales like TWA (array-free unlock) but lags
+    slightly behind it — two threads spin on grant instead of one."""
+    from repro.sim.workloads import median_throughput
+    t64 = {k: median_throughput(k, 64, runs=2)
+           for k in ("ticket", "twa", "twa-staged")}
+    assert t64["twa-staged"] > 1.5 * t64["ticket"]   # scales, unlike ticket
+    assert t64["twa-staged"] <= 1.1 * t64["twa"]     # but does not beat TWA
