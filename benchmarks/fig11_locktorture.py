@@ -1,26 +1,28 @@
 """Paper Figures 11/12 — Linux locktorture, high (N=20) and moderate (N=400)
-contention: CS = 20 PRNG steps, NCS uniform in [0,N]."""
+contention: CS = 20 PRNG steps, NCS uniform in [0,N].  One SweepSpec per
+contention level; both reuse a single compiled engine."""
 
 from __future__ import annotations
 
-from repro.sim.workloads import median_throughput
+from repro.sim.workloads import SweepSpec, sweep_curves
 
 from .common import emit
 
 THREADS = (1, 2, 4, 8, 16, 32, 64)
+LOCKS = ("ticket", "twa", "mcs")
 
 
 def run(threads=THREADS, runs: int = 3) -> dict:
     curves = {}
     for fig, ncs in (("fig11", 20), ("fig12", 400)):
-        for lock in ("ticket", "twa", "mcs"):
-            curve = []
-            for t in threads:
-                tp = median_throughput(lock, t, runs=runs, cs_work=20,
-                                       ncs_max=ncs)
+        spec = SweepSpec(locks=LOCKS, threads=tuple(threads),
+                         seeds=tuple(range(1, runs + 1)), cs_work=20,
+                         ncs_max=ncs)
+        fig_curves = sweep_curves(spec)
+        for lock in LOCKS:
+            for t, tp in zip(threads, fig_curves[lock]):
                 emit(f"{fig}/{lock}/threads={t}", f"{tp:.6f}", f"ncs_max={ncs}")
-                curve.append(tp)
-            curves[f"{fig}/{lock}"] = curve
+            curves[f"{fig}/{lock}"] = fig_curves[lock]
         emit(f"{fig}/twa_over_ticket@64",
              f"{curves[f'{fig}/twa'][-1] / curves[f'{fig}/ticket'][-1]:.3f}",
              "paper: >1 at high T")

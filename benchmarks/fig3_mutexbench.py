@@ -4,29 +4,29 @@ CS = 4 PRNG steps, NCS uniform in [0,200) steps (paper §4.2), on the lockVM.
 Claims validated (tests/test_sim_paper_claims.py):
   * ticket best at low T, collapses at high T;
   * TWA ≈ ticket at low T, ≥ MCS at high T.
-Also runs the appendix variants (tkt-dual, twa-id, twa-staged, partitioned).
+Also runs the appendix variants (tkt-dual, twa-id, twa-staged, partitioned)
+and the Anderson array-lock baseline.  The whole figure — every lock ×
+thread count × seed — is ONE SweepSpec and one compiled engine call.
 """
 
 from __future__ import annotations
 
-from repro.sim.workloads import median_throughput
+from repro.sim.workloads import SweepSpec, sweep_curves
 
 from .common import emit
 
 THREADS = (1, 2, 4, 8, 16, 32, 64)
 LOCKS = ("ticket", "twa", "mcs", "tkt-dual", "twa-id", "twa-staged",
-         "partitioned")
+         "partitioned", "anderson")
 
 
 def run(locks=LOCKS, threads=THREADS, runs: int = 3) -> dict:
-    curves = {}
+    spec = SweepSpec(locks=tuple(locks), threads=tuple(threads),
+                     seeds=tuple(range(1, runs + 1)), cs_work=4, ncs_max=200)
+    curves = sweep_curves(spec)
     for lock in locks:
-        curve = []
-        for t in threads:
-            tp = median_throughput(lock, t, runs=runs, cs_work=4, ncs_max=200)
+        for t, tp in zip(threads, curves[lock]):
             emit(f"fig3/{lock}/threads={t}", f"{tp:.6f}", "acq_per_cycle")
-            curve.append(tp)
-        curves[lock] = curve
     t64 = {k: v[-1] for k, v in curves.items()}
     emit("fig3/twa_over_ticket@64", f"{t64['twa'] / t64['ticket']:.3f}",
          "paper: >>1")

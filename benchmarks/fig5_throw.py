@@ -1,26 +1,26 @@
 """Paper Figure 5 — "throw": fully serialized critical sections, zero
 non-critical work (the C++ runtime exception-table lock).  NCS = 0, CS = 4
-PRNG steps; beyond 2 threads the curve recapitulates MutexBench.
+PRNG steps; beyond 2 threads the curve recapitulates MutexBench.  One
+SweepSpec, one compiled call.
 """
 
 from __future__ import annotations
 
-from repro.sim.workloads import median_throughput
+from repro.sim.workloads import SweepSpec, sweep_curves
 
 from .common import emit
 
 THREADS = (1, 2, 4, 8, 16, 32, 64)
+LOCKS = ("ticket", "twa", "mcs")
 
 
 def run(threads=THREADS, runs: int = 3) -> dict:
-    curves = {}
-    for lock in ("ticket", "twa", "mcs"):
-        curve = []
-        for t in threads:
-            tp = median_throughput(lock, t, runs=runs, cs_work=4, ncs_max=0)
+    spec = SweepSpec(locks=LOCKS, threads=tuple(threads),
+                     seeds=tuple(range(1, runs + 1)), cs_work=4, ncs_max=0)
+    curves = sweep_curves(spec)
+    for lock in LOCKS:
+        for t, tp in zip(threads, curves[lock]):
             emit(f"fig5/{lock}/threads={t}", f"{tp:.6f}", "acq_per_cycle")
-            curve.append(tp)
-        curves[lock] = curve
     emit("fig5/twa_over_ticket@64",
          f"{curves['twa'][-1] / curves['ticket'][-1]:.3f}", "paper: >>1")
     return curves

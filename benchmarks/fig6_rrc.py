@@ -5,32 +5,29 @@ lock with short think time — is matched here on the lockVM; stated in
 DESIGN.md §9).
 
 CS length random in [30, 80) PRNG steps (hash + cache ops), NCS in [0,200).
+One SweepSpec per profile, one compiled call.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.sim.workloads import run_contention
+from repro.sim.workloads import SweepSpec, sweep_curves
 
 from .common import emit
 
 THREADS = (1, 2, 4, 8, 16, 32, 64)
+LOCKS = ("ticket", "twa", "mcs")
 
 
 def run(threads=THREADS, runs: int = 3, profile: str = "rrc") -> dict:
     cs_rand = (30, 50) if profile == "rrc" else (10, 30)  # db: shorter CS
-    curves = {}
-    for lock in ("ticket", "twa", "mcs"):
-        curve = []
-        for t in threads:
-            tp = float(np.median([run_contention(
-                lock, t, cs_rand=cs_rand, ncs_max=200,
-                seed=s + 1)["throughput"] for s in range(runs)]))
+    spec = SweepSpec(locks=LOCKS, threads=tuple(threads),
+                     seeds=tuple(range(1, runs + 1)), cs_rand=cs_rand,
+                     ncs_max=200)
+    curves = sweep_curves(spec)
+    for lock in LOCKS:
+        for t, tp in zip(threads, curves[lock]):
             emit(f"fig6[{profile}]/{lock}/threads={t}", f"{tp:.6f}",
                  "acq_per_cycle")
-            curve.append(tp)
-        curves[lock] = curve
     emit(f"fig6[{profile}]/twa_over_ticket@64",
          f"{curves['twa'][-1] / curves['ticket'][-1]:.3f}", "paper: >1")
     return curves

@@ -1,30 +1,25 @@
 """Paper Figure 7 — libslock stress_latency: fixed CS = 200 delay-loop
 iterations, NCS = 5000 (scaled 1:25 on the lockVM to keep sim time bounded:
-CS=20, NCS fixed 500)."""
+CS=20, NCS fixed 500).  One SweepSpec, one compiled call."""
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.sim.workloads import run_contention
+from repro.sim.workloads import SweepSpec, sweep_curves
 
 from .common import emit
 
 THREADS = (1, 2, 4, 8, 16, 32, 64)
+LOCKS = ("ticket", "twa", "mcs")
 
 
 def run(threads=THREADS, runs: int = 3) -> dict:
-    curves = {}
-    for lock in ("ticket", "twa", "mcs"):
-        curve = []
-        for t in threads:
-            tp = float(np.median([run_contention(
-                lock, t, cs_work=20, cs_rand=None, ncs_max=0,
-                seed=s + 1, horizon=1_000_000)["throughput"]
-                for s in range(runs)]))
+    spec = SweepSpec(locks=LOCKS, threads=tuple(threads),
+                     seeds=tuple(range(1, runs + 1)), cs_work=20,
+                     cs_rand=None, ncs_max=0, horizon=1_000_000)
+    curves = sweep_curves(spec)
+    for lock in LOCKS:
+        for t, tp in zip(threads, curves[lock]):
             emit(f"fig7/{lock}/threads={t}", f"{tp:.6f}", "acq_per_cycle")
-            curve.append(tp)
-        curves[lock] = curve
     return curves
 
 

@@ -13,10 +13,14 @@ import threading
 import time
 
 from repro.core import make_lock
+from repro.sim.workloads import SweepSpec
 
 from .common import emit
 
-THREADS = (1, 4, 16)
+# Grid declared with the same SweepSpec the lockVM figures use; cells are
+# executed on host threads (make_lock) instead of the simulator.
+SPEC = SweepSpec(locks=("ticket", "twa", "mcs", "anderson"),
+                 threads=(1, 4, 16), seeds=(1,))
 WINDOW_S = 0.4
 
 
@@ -44,14 +48,13 @@ def _contend(lock, n_threads: int, window_s: float = WINDOW_S):
 
 def run() -> dict:
     out = {}
-    for kind in ("ticket", "twa", "mcs"):
-        for n in THREADS:
-            counts = _contend(make_lock(kind), n)
-            total = sum(counts)
-            spread = (max(counts) - min(counts)) / max(total, 1)
-            emit(f"threads/{kind}/threads={n}", total,
-                 f"fairness_spread={spread:.3f}")
-            out[(kind, n)] = total
+    for cell in SPEC.cells():
+        counts = _contend(make_lock(cell.lock), cell.n_threads)
+        total = sum(counts)
+        spread = (max(counts) - min(counts)) / max(total, 1)
+        emit(f"threads/{cell.lock}/threads={cell.n_threads}", total,
+             f"fairness_spread={spread:.3f}")
+        out[(cell.lock, cell.n_threads)] = total
     return out
 
 

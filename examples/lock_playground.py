@@ -12,14 +12,20 @@ import threading
 from repro.core import (DistributedTWALock, DistributedTicketLock,
                         InMemoryKVStore, LOCK_CLASSES, make_lock)
 from repro.sim.programs import SIM_LOCKS
-from repro.sim.workloads import run_contention
+from repro.sim.workloads import SweepSpec, run_sweep
+
+THREADS = (2, 16, 64)
 
 print("== lockVM: throughput (acq/cycle) and avg handover (cycles) ==")
-print(f"{'lock':>12} | " + " | ".join(f"T={t:<2}  tput   hand" for t in (2, 16, 64)))
+print(f"{'lock':>12} | " + " | ".join(f"T={t:<2}  tput   hand" for t in THREADS))
+# every (lock, T) cell in one compiled sweep
+results = {(r["lock"], r["n_threads"]): r
+           for r in run_sweep(SweepSpec(locks=tuple(SIM_LOCKS),
+                                        threads=THREADS, seeds=1))}
 for lock in SIM_LOCKS:
     cells = []
-    for t in (2, 16, 64):
-        r = run_contention(lock, t, seed=1)
+    for t in THREADS:
+        r = results[lock, t]
         cells.append(f"{r['throughput']:.5f} {r['avg_handover']:6.0f}")
     print(f"{lock:>12} | " + " | ".join(cells))
 

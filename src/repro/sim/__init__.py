@@ -2,16 +2,21 @@
 
 from .costs import Costs, DEFAULT_COSTS
 from .engine import run_sim
-from .programs import (ACQUIRE_GEN, Layout, RELEASE_GEN, SIM_LOCKS,
-                       build_invalidation_diameter, build_mutexbench,
-                       init_state)
-from .workloads import (fig1_invalidation_diameter, fig2_interlock_interference,
-                        mutexbench_curve, run_contention)
+from .programs import (ACQUIRE_GEN, INIT_MEM_GEN, Layout, PROG_LEN,
+                       RELEASE_GEN, SIM_LOCKS, build_invalidation_diameter,
+                       build_mutexbench, init_state, pad_mem, pad_program,
+                       pad_threads)
+from .workloads import (SweepCell, SweepSpec, fig1_invalidation_diameter,
+                        fig2_interlock_interference, median_throughput,
+                        mutexbench_curve, run_contention, run_sweep,
+                        sweep_curves)
 
 __all__ = [
-    "Costs", "DEFAULT_COSTS", "run_sim", "Layout", "SIM_LOCKS",
+    "Costs", "DEFAULT_COSTS", "run_sim", "Layout", "SIM_LOCKS", "PROG_LEN",
     "build_mutexbench", "build_invalidation_diameter", "init_state",
-    "ACQUIRE_GEN", "RELEASE_GEN",
+    "pad_program", "pad_threads", "pad_mem",
+    "ACQUIRE_GEN", "RELEASE_GEN", "INIT_MEM_GEN",
+    "SweepSpec", "SweepCell", "run_sweep", "sweep_curves",
     "fig1_invalidation_diameter", "fig2_interlock_interference",
-    "mutexbench_curve", "run_contention",
+    "mutexbench_curve", "run_contention", "median_throughput",
 ]

@@ -17,11 +17,33 @@ them) but charge full cost and wake watchers.  Loads register the thread as a
 line sharer; SPIN sleepers stay registered while parked — so every release
 store pays C_INV × (#threads camped on that line): ticket locks pay O(T),
 TWA pays O(LongTermThreshold). That asymmetry is the paper.
+
+Structure (batched-sweep refactor):
+  * :func:`_step` — pure single-event transition ``(SimConsts, SimState) ->
+    SimState``.  The opcode switch computes only a compact :class:`Effects`
+    record (scalars plus one register row); the big-array updates (memory,
+    sharer matrix, pending stores, wakeups) are applied ONCE outside the
+    switch.  This matters under ``vmap``: a batched ``lax.switch`` executes
+    every branch and selects, so branches must not carry whole-state copies.
+    A store commit is dispatched through the same switch as pseudo-opcode
+    ``isa.N_OPS``.
+  * :func:`_make_run` — wraps the step in a ``lax.while_loop`` driver plus
+    stats extraction.
+  * :func:`_build_engine` — lru-cached jit of the driver, keyed ONLY on array
+    shapes ``(n_threads, mem_words, n_locks, prog_len)``.  Everything else —
+    program contents, costs, waiting-array geometry, horizon — is a traced
+    input, so sweeping any of those axes reuses one executable.
+  * :func:`run_sweep` — ``jax.vmap`` of the driver over a leading batch axis:
+    an entire figure (lock × threads × seed × ...) is ONE compiled call.
+    Cells with fewer threads than the batch maximum mask the excess threads
+    inactive (``next_time = INF`` forever), which leaves their per-event
+    behaviour bit-identical to an unpadded run.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -30,413 +52,593 @@ import numpy as np
 from . import isa
 from .costs import (DEFAULT_COSTS, I_ATOMIC, I_HIT, I_INV, I_LOCAL, I_MISS,
                     I_ST_OWNED, I_ST_SHARED, I_WAKE, I_XFER, Costs)
+from .programs import PROG_LEN, pad_program
 
 INF = np.int32(1 << 29)
 
 
-@functools.lru_cache(maxsize=64)
-def _build_engine(n_threads: int, mem_words: int, n_locks: int, prog_len: int,
-                  wa_base: int, wa_mask: int, wa_size: int):
-    """Compile an engine for a given shape set (program contents are inputs)."""
+class SimConsts(NamedTuple):
+    """Per-run inputs that stay fixed for the whole simulation (all traced)."""
 
+    program: jax.Array     # (prog_len, 5) int32 micro-ops
+    costs: jax.Array       # (9,) int32 — Costs.to_array()
+    wa_base: jax.Array     # () int32 waiting-array base address
+    wa_mask: jax.Array     # () int32 index mask (wa_size - 1)
+    wa_size: jax.Array     # () int32 per-lock array stride (HASHP)
+    horizon: jax.Array     # () int32 stop once every timeline passes this
+    max_events: jax.Array  # () int32 hard event-count bound
+
+
+class SimState(NamedTuple):
+    """Full simulator state; a pytree so it threads through lax.while_loop."""
+
+    next_time: jax.Array   # (T,) per-thread timeline; INF = parked/inactive
+    pc: jax.Array          # (T,)
+    regs: jax.Array        # (T, N_REGS)
+    prng: jax.Array        # (T,) uint32 LCG state
+    mem: jax.Array         # (mem_words,)
+    sharers: jax.Array     # (n_lines, T) bool — thread caches the line
+    dirty: jax.Array       # (n_lines,) owning thread or -1
+    pend_addr: jax.Array   # (T,) pending-store address or -1
+    pend_val: jax.Array    # (T,)
+    pend_time: jax.Array   # (T,) commit time of the pending store
+    spin_addr: jax.Array   # (T,) watched address while parked, or -1
+    acq: jax.Array         # (T,) lock acquisitions
+    waited_acq: jax.Array  # (T,) acquisitions that had to wait
+    rel_time: jax.Array    # (n_locks,) last REL timestamp or -1
+    hand_sum: jax.Array    # () summed handover latency
+    hand_cnt: jax.Array    # () handovers measured
+    events: jax.Array      # () total events executed
+
+
+class Effects(NamedTuple):
+    """What one event does, in O(1) scalars plus the actor's register row.
+
+    Every switch branch returns one of these; the apply phase in
+    :func:`_step` turns it into state updates.  "actor" is the executing
+    thread for a program op, or the committing thread for a store commit.
+    Sentinel -1 disables an address/index-valued effect.
+    """
+
+    cost: jax.Array        # charged to the actor (advancing events only)
+    new_pc: jax.Array
+    reg_row: jax.Array     # (N_REGS,) the actor's registers after the event
+    prng_t: jax.Array      # actor's PRNG state after the event
+    sleep: jax.Array       # bool — park the actor (next_time = INF)
+    advance: jax.Array     # bool — update the actor's pc/regs/prng/next_time
+    st_addr: jax.Array     # delayed-store address, -1 = none
+    st_val: jax.Array
+    st_time: jax.Array     # commit time of the delayed store
+    clear_pend: jax.Array  # bool — a commit consumed the actor's pending store
+    w_addr: jax.Array      # immediate memory write (RMW/commit), -1 = none
+    w_val: jax.Array
+    excl_ln: jax.Array     # line that became exclusive to the actor, -1 = none
+    share_ln: jax.Array    # line the actor registered as a sharer of, -1
+    downgrade: jax.Array   # bool — dirty[share_ln] = -1 (foreign dirty read)
+    park_addr: jax.Array   # actor parks watching this address, -1 = none
+    wake_addr: jax.Array   # wake watchers of this address, -1 = none
+    wake_time: jax.Array
+    acq_inc: jax.Array     # bool — actor completed an acquisition
+    waited_inc: jax.Array  # bool — ... that had to wait
+    hand_add: jax.Array    # handover latency to accumulate
+    hand_inc: jax.Array    # bool
+    rel_idx: jax.Array     # rel_time slot to write, -1 = none
+    rel_val: jax.Array
+
+
+def _event_times(s: SimState):
+    """Earliest thread-op time and earliest pending-commit time."""
+    t_th = jnp.min(s.next_time)
+    t_cm = jnp.min(jnp.where(s.pend_addr >= 0, s.pend_time, INF))
+    return t_th, t_cm
+
+
+def _step(c: SimConsts, s: SimState) -> SimState:
+    """Advance the simulation by exactly one event (commit or thread op)."""
+    n_threads = s.next_time.shape[0]
+    C = c.costs
+
+    (next_time, pc, regs, prng, mem, sharers, dirty,
+     pend_addr, pend_val, pend_time, spin_addr,
+     acq, waited_acq, rel_time, hand_sum, hand_cnt, events) = s
+
+    t = jnp.argmin(next_time)
+    t_th = next_time[t]
+    ptimes = jnp.where(pend_addr >= 0, pend_time, INF)
+    tc = jnp.argmin(ptimes)
+    t_cm = ptimes[tc]
+    is_commit = t_cm <= t_th
+    # Self-guarding: a lane past its horizon / event budget dispatches the
+    # no-event pseudo-op, making the whole step an identity.  The unbatched
+    # driver's loop condition never lets this fire; the batched driver relies
+    # on it so lanes that finish early idle for free (no per-lane select).
+    live = (events < c.max_events) & (jnp.minimum(t_th, t_cm) < c.horizon)
+
+    now = t_th
+    instr = c.program[pc[t]]
+    op, a, b, cc, imm = instr[0], instr[1], instr[2], instr[3], instr[4]
+    ra, rb, rc = regs[t, a], regs[t, b], regs[t, cc]
+    pc1 = pc[t] + 1
+
+    def load_cost(ln):
+        mine = sharers[ln, t]
+        d = dirty[ln]
+        return jnp.where(mine, C[I_HIT],
+                         jnp.where((d >= 0) & (d != t), C[I_XFER], C[I_MISS]))
+
+    def store_cost(ln, atomic):
+        row = sharers[ln]
+        others = row.sum() - row[t]
+        only = row[t] & (others == 0)
+        cost = jnp.where(only, C[I_ST_OWNED], C[I_ST_SHARED] + C[I_INV] * others)
+        return (cost + jnp.where(atomic, C[I_ATOMIC], 0)).astype(jnp.int32)
+
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+    none = i32(-1)
+    zero = i32(0)
+    no = jnp.zeros((), bool)
+    yes = jnp.ones((), bool)
+    default = Effects(
+        cost=C[I_LOCAL], new_pc=pc1, reg_row=regs[t], prng_t=prng[t],
+        sleep=no, advance=yes,
+        st_addr=none, st_val=zero, st_time=zero, clear_pend=no,
+        w_addr=none, w_val=zero, excl_ln=none,
+        share_ln=none, downgrade=no, park_addr=none,
+        wake_addr=none, wake_time=zero,
+        acq_inc=no, waited_inc=no, hand_add=zero, hand_inc=no,
+        rel_idx=none, rel_val=zero)
+
+    def h_nop():
+        return default
+
+    def h_load():
+        addr = rb + imm
+        ln = addr >> isa.LINE_SHIFT
+        mine = sharers[ln, t]
+        d = dirty[ln]
+        return default._replace(
+            cost=load_cost(ln),
+            reg_row=regs[t].at[a].set(mem[addr]),
+            share_ln=ln,
+            downgrade=(~mine) & (d >= 0) & (d != t))
+
+    def _store(addr, val):
+        ln = addr >> isa.LINE_SHIFT
+        cost = store_cost(ln, False)
+        return default._replace(cost=cost, st_addr=addr, st_val=val,
+                                st_time=now + cost)
+
+    def h_store():
+        return _store(ra + imm, rb)
+
+    def h_storei():
+        return _store(ra + imm, b)
+
+    def _rmw(addr, new_val, dst_old):
+        """Immediate atomic RMW: apply, invalidate, wake watchers."""
+        ln = addr >> isa.LINE_SHIFT
+        cost = store_cost(ln, True)
+        old = mem[addr]
+        return default._replace(
+            cost=cost,
+            reg_row=regs[t].at[dst_old].set(old),
+            w_addr=addr, w_val=i32(new_val(old)),
+            excl_ln=ln, wake_addr=addr, wake_time=now + cost)
+
+    def h_fadd():
+        return _rmw(rb + imm, lambda old: old + cc, a)
+
+    def h_swap():
+        return _rmw(rb + imm, lambda old: rc, a)
+
+    def h_casz():
+        return _rmw(rb + imm, lambda old: jnp.where(old == rc, 0, old), a)
+
+    def _alu(value):
+        return default._replace(reg_row=regs[t].at[a].set(value))
+
+    def h_addi():
+        return _alu(rb + imm)
+
+    def h_movi():
+        return _alu(imm)
+
+    def h_mov():
+        return _alu(rb)
+
+    def h_sub():
+        return _alu(rb - rc)
+
+    def h_muli():
+        return _alu(rb * imm)
+
+    def h_andi():
+        return _alu(rb & imm)
+
+    def h_hash():
+        return _alu(c.wa_base + (((rb * 127) ^ rc) & c.wa_mask))
+
+    def h_hashp():
+        return _alu(c.wa_base + rc * c.wa_size + ((rb * 127) & c.wa_mask))
+
+    def _branch(cond):
+        return default._replace(new_pc=i32(jnp.where(cond, imm, pc1)))
+
+    def h_beq():
+        return _branch(ra == rb)
+
+    def h_bne():
+        return _branch(ra != rb)
+
+    def h_ble():
+        return _branch(ra <= rb)
+
+    def h_bgt():
+        return _branch(ra > rb)
+
+    def h_beqi():
+        return _branch(ra == cc)
+
+    def h_bnei():
+        return _branch(ra != cc)
+
+    def h_blei():
+        return _branch(ra <= cc)
+
+    def h_bgti():
+        return _branch(ra > cc)
+
+    def h_jmp():
+        return _branch(True)
+
+    def h_worki():
+        return default._replace(cost=jnp.maximum(imm, 1))
+
+    def h_workr():
+        return default._replace(cost=jnp.maximum(ra, 1))
+
+    def h_prng():
+        sd = prng[t] * jnp.uint32(1664525) + jnp.uint32(1013904223)
+        val = ((sd >> jnp.uint32(16)).astype(jnp.int32)) % jnp.maximum(imm, 1)
+        return default._replace(reg_row=regs[t].at[a].set(val), prng_t=sd)
+
+    def _spin(proceed, addr):
+        """Fused spin: proceed (load cost) or park camped on the line."""
+        ln = addr >> isa.LINE_SHIFT
+        return default._replace(
+            cost=load_cost(ln),
+            new_pc=i32(jnp.where(proceed, pc1, pc[t])),
+            share_ln=ln,
+            sleep=~proceed,
+            park_addr=i32(jnp.where(proceed, -1, addr)))
+
+    def h_spin_eq():
+        addr = rb + imm
+        return _spin(mem[addr] == ra, addr)
+
+    def h_spin_ne():
+        addr = rb + imm
+        return _spin(mem[addr] != ra, addr)
+
+    def h_spin_eqi():
+        addr = rb + imm
+        return _spin(mem[addr] == cc, addr)
+
+    def h_spin_nei():
+        addr = rb + imm
+        return _spin(mem[addr] != cc, addr)
+
+    def h_acq():
+        lidx = ra
+        rt = rel_time[lidx]
+        waited = cc > 0
+        got = waited & (rt >= 0)
+        return default._replace(
+            acq_inc=yes, waited_inc=waited,
+            hand_add=i32(jnp.where(got, now - rt, 0)), hand_inc=got,
+            rel_idx=lidx, rel_val=i32(jnp.where(got, -1, rt)))
+
+    def h_rel():
+        return default._replace(rel_idx=rb, rel_val=now)
+
+    def h_halt():
+        return default._replace(cost=i32(INF), new_pc=pc[t])
+
+    def h_commit():
+        """Pseudo-op: the earliest pending store becomes globally visible."""
+        addr = pend_addr[tc]
+        ln = addr >> isa.LINE_SHIFT
+        return default._replace(
+            advance=no, clear_pend=yes,
+            w_addr=addr, w_val=pend_val[tc],
+            excl_ln=ln, wake_addr=addr, wake_time=t_cm)
+
+    def h_noevent():
+        """Pseudo-op for finished lanes: touch nothing."""
+        return default._replace(advance=no)
+
+    handlers = [None] * isa.N_OPS
+    handlers[isa.NOP] = h_nop
+    handlers[isa.LOAD] = h_load
+    handlers[isa.STORE] = h_store
+    handlers[isa.STOREI] = h_storei
+    handlers[isa.FADD] = h_fadd
+    handlers[isa.SWAP] = h_swap
+    handlers[isa.CASZ] = h_casz
+    handlers[isa.ADDI] = h_addi
+    handlers[isa.MOVI] = h_movi
+    handlers[isa.MOV] = h_mov
+    handlers[isa.SUB] = h_sub
+    handlers[isa.MULI] = h_muli
+    handlers[isa.ANDI] = h_andi
+    handlers[isa.HASH] = h_hash
+    handlers[isa.HASHP] = h_hashp
+    handlers[isa.BEQ] = h_beq
+    handlers[isa.BNE] = h_bne
+    handlers[isa.BLE] = h_ble
+    handlers[isa.BGT] = h_bgt
+    handlers[isa.BEQI] = h_beqi
+    handlers[isa.BNEI] = h_bnei
+    handlers[isa.BLEI] = h_blei
+    handlers[isa.BGTI] = h_bgti
+    handlers[isa.JMP] = h_jmp
+    handlers[isa.WORKI] = h_worki
+    handlers[isa.WORKR] = h_workr
+    handlers[isa.PRNG] = h_prng
+    handlers[isa.SPIN_EQ] = h_spin_eq
+    handlers[isa.SPIN_NE] = h_spin_ne
+    handlers[isa.SPIN_EQI] = h_spin_eqi
+    handlers[isa.SPIN_NEI] = h_spin_nei
+    handlers[isa.ACQ] = h_acq
+    handlers[isa.REL] = h_rel
+    handlers[isa.HALT] = h_halt
+    handlers.append(h_commit)   # pseudo-opcode isa.N_OPS
+    handlers.append(h_noevent)  # pseudo-opcode isa.N_OPS + 1
+
+    branch = jnp.where(live, jnp.where(is_commit, isa.N_OPS, op),
+                       isa.N_OPS + 1)
+    e: Effects = jax.lax.switch(branch, handlers)
+
+    # ---- apply phase: every state update happens exactly once ------------
+    actor = jnp.where(is_commit, tc, t)
+    adv = e.advance
+
+    # wake watchers of the written line (commit / RMW)
+    wake = (e.wake_addr >= 0) & (spin_addr == e.wake_addr)
+    nt2 = jnp.where(wake, e.wake_time + C[I_WAKE], next_time)
+    sp2 = jnp.where(wake, -1, spin_addr)
+    # actor park / advance (the actor's own update wins over a wake)
+    sp2 = sp2.at[actor].set(jnp.where(e.park_addr >= 0, e.park_addr,
+                                      sp2[actor]))
+    nt2 = nt2.at[actor].set(jnp.where(
+        adv, jnp.where(e.sleep, INF, now + e.cost), nt2[actor]))
+
+    pc2 = pc.at[actor].set(jnp.where(adv, e.new_pc, pc[actor]))
+    regs2 = regs.at[actor].set(jnp.where(adv, e.reg_row, regs[actor]))
+    prng2 = prng.at[actor].set(jnp.where(adv, e.prng_t, prng[actor]))
+
+    # immediate memory write (RMW / commit)
+    wa = jnp.where(e.w_addr >= 0, e.w_addr, 0)
+    mem2 = mem.at[wa].set(jnp.where(e.w_addr >= 0, e.w_val, mem[wa]))
+
+    # sharer registration (+ downgrade of a foreign dirty line)
+    ls = jnp.where(e.share_ln >= 0, e.share_ln, 0)
+    sh2 = sharers.at[ls, actor].set((e.share_ln >= 0) | sharers[ls, actor])
+    dr2 = dirty.at[ls].set(jnp.where((e.share_ln >= 0) & e.downgrade,
+                                     -1, dirty[ls]))
+    # exclusive ownership (RMW / commit): invalidate every other sharer
+    le = jnp.where(e.excl_ln >= 0, e.excl_ln, 0)
+    sh2 = sh2.at[le].set(jnp.where(e.excl_ln >= 0,
+                                   jnp.arange(n_threads) == actor, sh2[le]))
+    dr2 = dr2.at[le].set(jnp.where(e.excl_ln >= 0, actor, dr2[le]))
+
+    # pending-store queue (enqueue on STORE/STOREI, consume on commit)
+    pa2 = pend_addr.at[actor].set(jnp.where(
+        e.st_addr >= 0, e.st_addr,
+        jnp.where(e.clear_pend, -1, pend_addr[actor])))
+    pv2 = pend_val.at[actor].set(jnp.where(e.st_addr >= 0, e.st_val,
+                                           pend_val[actor]))
+    pt2 = pend_time.at[actor].set(jnp.where(e.st_addr >= 0, e.st_time,
+                                            pend_time[actor]))
+
+    # lock bookkeeping
+    acq2 = acq.at[actor].add(e.acq_inc.astype(jnp.int32))
+    wacq2 = waited_acq.at[actor].add(e.waited_inc.astype(jnp.int32))
+    ri = jnp.where(e.rel_idx >= 0, e.rel_idx, 0)
+    rel2 = rel_time.at[ri].set(jnp.where(e.rel_idx >= 0, e.rel_val,
+                                         rel_time[ri]))
+    hs2 = hand_sum + e.hand_add
+    hc2 = hand_cnt + e.hand_inc.astype(jnp.int32)
+
+    return SimState(nt2, pc2, regs2, prng2, mem2, sh2, dr2,
+                    pa2, pv2, pt2, sp2,
+                    acq2, wacq2, rel2, hs2, hc2,
+                    events + live.astype(jnp.int32))
+
+
+def _initial_state(n_threads: int, mem_words: int, n_locks: int,
+                   init_pc, init_regs, init_mem, n_active, seed) -> SimState:
     n_lines = mem_words // isa.WORDS_PER_SECTOR
+    active = jnp.arange(n_threads) < n_active
+    return SimState(
+        next_time=jnp.where(active, 0, INF).astype(jnp.int32),
+        pc=init_pc.astype(jnp.int32),
+        regs=init_regs.astype(jnp.int32),
+        prng=(seed.astype(jnp.uint32)
+              + jnp.arange(n_threads, dtype=jnp.uint32) * jnp.uint32(2654435761)),
+        mem=init_mem.astype(jnp.int32),
+        sharers=jnp.zeros((n_lines, n_threads), bool),
+        dirty=jnp.full(n_lines, -1, jnp.int32),
+        pend_addr=jnp.full(n_threads, -1, jnp.int32),
+        pend_val=jnp.zeros(n_threads, jnp.int32),
+        pend_time=jnp.zeros(n_threads, jnp.int32),
+        spin_addr=jnp.full(n_threads, -1, jnp.int32),
+        acq=jnp.zeros(n_threads, jnp.int32),
+        waited_acq=jnp.zeros(n_threads, jnp.int32),
+        rel_time=jnp.full(n_locks, -1, jnp.int32),
+        hand_sum=jnp.zeros((), jnp.int32),
+        hand_cnt=jnp.zeros((), jnp.int32),
+        events=jnp.zeros((), jnp.int32),
+    )
 
-    def run(program, init_pc, init_regs, seed, horizon, max_events, costs):
-        C = costs  # (9,) int32
 
-        def load_cost(sharers, dirty, t, ln):
-            mine = sharers[ln, t]
-            d = dirty[ln]
-            return jnp.where(mine, C[I_HIT],
-                             jnp.where((d >= 0) & (d != t), C[I_XFER], C[I_MISS]))
+def _make_run(n_threads: int, mem_words: int, n_locks: int):
+    """While-loop driver over the single-event step for one shape set."""
 
-        def store_cost(sharers, dirty, t, ln, atomic):
-            row = sharers[ln]
-            others = row.sum() - row[t]
-            only = row[t] & (others == 0)
-            cost = jnp.where(only, C[I_ST_OWNED], C[I_ST_SHARED] + C[I_INV] * others)
-            return cost + jnp.where(atomic, C[I_ATOMIC], 0)
+    def run(program, init_pc, init_regs, init_mem, n_active, seed,
+            horizon, max_events, costs, wa_base, wa_mask, wa_size):
+        c = SimConsts(program=program, costs=costs,
+                      wa_base=wa_base, wa_mask=wa_mask, wa_size=wa_size,
+                      horizon=horizon, max_events=max_events)
 
-        def wake_watchers(st, addr, at_time):
-            (next_time, spin_addr) = st
-            wake = spin_addr == addr
-            next_time = jnp.where(wake, at_time + C[I_WAKE], next_time)
-            spin_addr = jnp.where(wake, -1, spin_addr)
-            return next_time, spin_addr
+        def cond(s: SimState):
+            t_th, t_cm = _event_times(s)
+            return (s.events < c.max_events) & (jnp.minimum(t_th, t_cm) < c.horizon)
 
-        def body(state):
-            (next_time, pc, regs, prng, mem, sharers, dirty,
-             pend_addr, pend_val, pend_time, spin_addr,
-             acq, waited_acq, rel_time, hand_sum, hand_cnt, events) = state
-
-            t = jnp.argmin(next_time)
-            t_th = next_time[t]
-            ptimes = jnp.where(pend_addr >= 0, pend_time, INF)
-            tc = jnp.argmin(ptimes)
-            t_cm = ptimes[tc]
-
-            def do_commit(_):
-                addr = pend_addr[tc]
-                ln = addr >> isa.LINE_SHIFT
-                mem2 = mem.at[addr].set(pend_val[tc])
-                sh2 = sharers.at[ln].set(jax.nn.one_hot(tc, n_threads, dtype=bool))
-                dr2 = dirty.at[ln].set(tc)
-                nt2, sp2 = wake_watchers((next_time, spin_addr), addr, t_cm)
-                pa2 = pend_addr.at[tc].set(-1)
-                return (nt2, pc, regs, prng, mem2, sh2, dr2,
-                        pa2, pend_val, pend_time, sp2,
-                        acq, waited_acq, rel_time, hand_sum, hand_cnt, events + 1)
-
-            def do_exec(_):
-                now = t_th
-                instr = program[pc[t]]
-                op, a, b, c, imm = instr[0], instr[1], instr[2], instr[3], instr[4]
-                ra, rb, rc = regs[t, a], regs[t, b], regs[t, c]
-
-                # Defaults each handler may override.
-                # handler returns: (cost, new_pc_t, regs_t_row, mem, sharers, dirty,
-                #                   pend triple, spin_addr, prng_t,
-                #                   acq, waited_acq, rel_time, hand_sum, hand_cnt,
-                #                   sleep_flag)
-                pc1 = pc[t] + 1
-
-                def h_nop():
-                    return (C[I_LOCAL], pc1, regs[t], mem, sharers, dirty,
-                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
-
-                def h_load():
-                    addr = rb + imm
-                    ln = addr >> isa.LINE_SHIFT
-                    cost = load_cost(sharers, dirty, t, ln)
-                    mine = sharers[ln, t]
-                    d = dirty[ln]
-                    sh2 = sharers.at[ln, t].set(True)
-                    dr2 = dirty.at[ln].set(jnp.where((~mine) & (d >= 0) & (d != t), -1, d))
-                    row = regs[t].at[a].set(mem[addr])
-                    return (cost, pc1, row, mem, sh2, dr2,
-                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
-
-                def _store_common(addr, val):
-                    ln = addr >> isa.LINE_SHIFT
-                    cost = store_cost(sharers, dirty, t, ln, False)
-                    pa = pend_addr.at[t].set(addr)
-                    pv = pend_val.at[t].set(val)
-                    pt = pend_time.at[t].set(now + cost)
-                    return cost, pa, pv, pt
-
-                def h_store():
-                    cost, pa, pv, pt = _store_common(ra + imm, rb)
-                    return (cost, pc1, regs[t], mem, sharers, dirty,
-                            pa, pv, pt, spin_addr, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
-
-                def h_storei():
-                    cost, pa, pv, pt = _store_common(ra + imm, b)
-                    return (cost, pc1, regs[t], mem, sharers, dirty,
-                            pa, pv, pt, spin_addr, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
-
-                def _rmw(addr, new_val, dst_old):
-                    """Immediate atomic RMW: apply, invalidate, wake watchers."""
-                    ln = addr >> isa.LINE_SHIFT
-                    cost = store_cost(sharers, dirty, t, ln, True)
-                    old = mem[addr]
-                    mem2 = mem.at[addr].set(new_val(old))
-                    sh2 = sharers.at[ln].set(jax.nn.one_hot(t, n_threads, dtype=bool))
-                    dr2 = dirty.at[ln].set(t)
-                    nt2, sp2 = wake_watchers((next_time, spin_addr), addr, now + cost)
-                    row = regs[t].at[dst_old].set(old)
-                    return cost, old, row, mem2, sh2, dr2, nt2, sp2
-
-                def h_fadd():
-                    cost, _, row, mem2, sh2, dr2, nt2, sp2 = _rmw(
-                        rb + imm, lambda old: old + c, a)
-                    return (cost, pc1, row, mem2, sh2, dr2,
-                            pend_addr, pend_val, pend_time, sp2, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False,
-                            nt2)
-
-                def h_swap():
-                    cost, _, row, mem2, sh2, dr2, nt2, sp2 = _rmw(
-                        rb + imm, lambda old: rc, a)
-                    return (cost, pc1, row, mem2, sh2, dr2,
-                            pend_addr, pend_val, pend_time, sp2, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False,
-                            nt2)
-
-                def h_casz():
-                    addr = rb + imm
-                    cost, old, row, mem2, sh2, dr2, nt2, sp2 = _rmw(
-                        addr, lambda old: jnp.where(old == rc, 0, old), a)
-                    return (cost, pc1, row, mem2, sh2, dr2,
-                            pend_addr, pend_val, pend_time, sp2, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False,
-                            nt2)
-
-                def _alu(value):
-                    row = regs[t].at[a].set(value)
-                    return (C[I_LOCAL], pc1, row, mem, sharers, dirty,
-                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
-
-                def h_addi():
-                    return _alu(rb + imm)
-
-                def h_movi():
-                    return _alu(imm)
-
-                def h_mov():
-                    return _alu(rb)
-
-                def h_sub():
-                    return _alu(rb - rc)
-
-                def h_muli():
-                    return _alu(rb * imm)
-
-                def h_andi():
-                    return _alu(rb & imm)
-
-                def h_hash():
-                    return _alu(wa_base + (((rb * 127) ^ rc) & wa_mask))
-
-                def h_hashp():
-                    return _alu(wa_base + rc * wa_size + ((rb * 127) & wa_mask))
-
-                def _branch(cond):
-                    new_pc = jnp.where(cond, imm, pc1)
-                    return (C[I_LOCAL], new_pc, regs[t], mem, sharers, dirty,
-                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
-
-                def h_beq():
-                    return _branch(ra == rb)
-
-                def h_bne():
-                    return _branch(ra != rb)
-
-                def h_ble():
-                    return _branch(ra <= rb)
-
-                def h_bgt():
-                    return _branch(ra > rb)
-
-                def h_beqi():
-                    return _branch(ra == c)
-
-                def h_bnei():
-                    return _branch(ra != c)
-
-                def h_blei():
-                    return _branch(ra <= c)
-
-                def h_bgti():
-                    return _branch(ra > c)
-
-                def h_jmp():
-                    return _branch(True)
-
-                def h_worki():
-                    return (jnp.maximum(imm, 1), pc1, regs[t], mem, sharers, dirty,
-                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
-
-                def h_workr():
-                    return (jnp.maximum(ra, 1), pc1, regs[t], mem, sharers, dirty,
-                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
-
-                def h_prng():
-                    s = prng[t] * jnp.uint32(1664525) + jnp.uint32(1013904223)
-                    val = ((s >> jnp.uint32(16)).astype(jnp.int32)) % jnp.maximum(imm, 1)
-                    row = regs[t].at[a].set(val)
-                    return (C[I_LOCAL], pc1, row, mem, sharers, dirty,
-                            pend_addr, pend_val, pend_time, spin_addr, s,
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
-
-                def _spin(proceed, addr):
-                    """Fused spin: proceed (load-hit cost) or park on the line."""
-                    ln = addr >> isa.LINE_SHIFT
-                    cost = load_cost(sharers, dirty, t, ln)
-                    sh2 = sharers.at[ln, t].set(True)  # camped on the line
-                    new_pc = jnp.where(proceed, pc1, pc[t])
-                    sp2 = jnp.where(proceed, spin_addr, spin_addr.at[t].set(addr))
-                    return (cost, new_pc, regs[t], mem, sh2, dirty,
-                            pend_addr, pend_val, pend_time, sp2, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt,
-                            ~proceed)
-
-                def h_spin_eq():
-                    addr = rb + imm
-                    return _spin(mem[addr] == ra, addr)
-
-                def h_spin_ne():
-                    addr = rb + imm
-                    return _spin(mem[addr] != ra, addr)
-
-                def h_spin_eqi():
-                    addr = rb + imm
-                    return _spin(mem[addr] == c, addr)
-
-                def h_spin_nei():
-                    addr = rb + imm
-                    return _spin(mem[addr] != c, addr)
-
-                def h_acq():
-                    lidx = ra
-                    rt = rel_time[lidx]
-                    waited = c > 0
-                    got = waited & (rt >= 0)
-                    hs = hand_sum + jnp.where(got, now - rt, 0)
-                    hc = hand_cnt + jnp.where(got, 1, 0)
-                    rel2 = rel_time.at[lidx].set(jnp.where(got, -1, rt))
-                    acq2 = acq.at[t].add(1)
-                    wacq2 = waited_acq.at[t].add(jnp.where(waited, 1, 0))
-                    return (C[I_LOCAL], pc1, regs[t], mem, sharers, dirty,
-                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
-                            acq2, wacq2, rel2, hs, hc, False)
-
-                def h_rel():
-                    lidx = rb
-                    rel2 = rel_time.at[lidx].set(now)
-                    return (C[I_LOCAL], pc1, regs[t], mem, sharers, dirty,
-                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
-                            acq, waited_acq, rel2, hand_sum, hand_cnt, False)
-
-                def h_halt():
-                    return (INF, pc[t], regs[t], mem, sharers, dirty,
-                            pend_addr, pend_val, pend_time, spin_addr, prng[t],
-                            acq, waited_acq, rel_time, hand_sum, hand_cnt, False)
-
-                # Handlers that rewrite next_time (RMW wakes) return 18 items;
-                # normalize others by appending the unchanged next_time.
-                def norm(h):
-                    def wrapped():
-                        out = h()
-                        if len(out) == 17:
-                            out = out + (next_time,)
-                        out = list(out)
-                        out[0] = jnp.asarray(out[0], jnp.int32)   # cost
-                        out[1] = jnp.asarray(out[1], jnp.int32)   # new pc
-                        out[16] = jnp.asarray(out[16], bool)      # sleep flag
-                        return tuple(out)
-                    return wrapped
-
-                handlers = [None] * isa.N_OPS
-                handlers[isa.NOP] = h_nop
-                handlers[isa.LOAD] = h_load
-                handlers[isa.STORE] = h_store
-                handlers[isa.STOREI] = h_storei
-                handlers[isa.FADD] = h_fadd
-                handlers[isa.SWAP] = h_swap
-                handlers[isa.CASZ] = h_casz
-                handlers[isa.ADDI] = h_addi
-                handlers[isa.MOVI] = h_movi
-                handlers[isa.MOV] = h_mov
-                handlers[isa.SUB] = h_sub
-                handlers[isa.MULI] = h_muli
-                handlers[isa.ANDI] = h_andi
-                handlers[isa.HASH] = h_hash
-                handlers[isa.HASHP] = h_hashp
-                handlers[isa.BEQ] = h_beq
-                handlers[isa.BNE] = h_bne
-                handlers[isa.BLE] = h_ble
-                handlers[isa.BGT] = h_bgt
-                handlers[isa.BEQI] = h_beqi
-                handlers[isa.BNEI] = h_bnei
-                handlers[isa.BLEI] = h_blei
-                handlers[isa.BGTI] = h_bgti
-                handlers[isa.JMP] = h_jmp
-                handlers[isa.WORKI] = h_worki
-                handlers[isa.WORKR] = h_workr
-                handlers[isa.PRNG] = h_prng
-                handlers[isa.SPIN_EQ] = h_spin_eq
-                handlers[isa.SPIN_NE] = h_spin_ne
-                handlers[isa.SPIN_EQI] = h_spin_eqi
-                handlers[isa.SPIN_NEI] = h_spin_nei
-                handlers[isa.ACQ] = h_acq
-                handlers[isa.REL] = h_rel
-                handlers[isa.HALT] = h_halt
-
-                (cost, new_pc_t, row, mem2, sh2, dr2,
-                 pa2, pv2, pt2, sp2, prng_t,
-                 acq2, wacq2, rel2, hs2, hc2, sleep, nt_base) = jax.lax.switch(
-                    op, [norm(h) for h in handlers])
-
-                nt2 = nt_base.at[t].set(
-                    jnp.where(sleep, INF, now + cost).astype(nt_base.dtype))
-                pc2 = pc.at[t].set(new_pc_t)
-                regs2 = regs.at[t].set(row)
-                prng2 = prng.at[t].set(prng_t)
-                return (nt2, pc2, regs2, prng2, mem2, sh2, dr2,
-                        pa2, pv2, pt2, sp2,
-                        acq2, wacq2, rel2, hs2, hc2, events + 1)
-
-            return jax.lax.cond(t_cm <= t_th, do_commit, do_exec, None)
-
-        def cond(state):
-            next_time = state[0]
-            pend_addr, pend_time = state[7], state[9]
-            events = state[16]
-            t_th = jnp.min(next_time)
-            t_cm = jnp.min(jnp.where(pend_addr >= 0, pend_time, INF))
-            return (events < max_events) & (jnp.minimum(t_th, t_cm) < horizon)
-
-        state0 = (
-            jnp.zeros(n_threads, jnp.int32),                    # next_time
-            init_pc.astype(jnp.int32),                          # pc
-            init_regs.astype(jnp.int32),                        # regs
-            (seed + jnp.arange(n_threads, dtype=jnp.uint32)     # prng
-             * jnp.uint32(2654435761)),
-            jnp.zeros(mem_words, jnp.int32),                    # mem
-            jnp.zeros((n_lines, n_threads), bool),              # sharers
-            jnp.full(n_lines, -1, jnp.int32),                   # dirty
-            jnp.full(n_threads, -1, jnp.int32),                 # pend_addr
-            jnp.zeros(n_threads, jnp.int32),                    # pend_val
-            jnp.zeros(n_threads, jnp.int32),                    # pend_time
-            jnp.full(n_threads, -1, jnp.int32),                 # spin_addr
-            jnp.zeros(n_threads, jnp.int32),                    # acq
-            jnp.zeros(n_threads, jnp.int32),                    # waited_acq
-            jnp.full(n_locks, -1, jnp.int32),                   # rel_time
-            jnp.zeros((), jnp.int32),                           # hand_sum
-            jnp.zeros((), jnp.int32),                           # hand_cnt
-            jnp.zeros((), jnp.int32),                           # events
-        )
-        final = jax.lax.while_loop(cond, body, state0)
+        final = jax.lax.while_loop(cond, functools.partial(_step, c),
+                                   _initial_state(n_threads, mem_words, n_locks,
+                                                  init_pc, init_regs, init_mem,
+                                                  n_active, seed))
         return {
-            "acquisitions": final[11],
-            "waited_acquisitions": final[12],
-            "handover_sum": final[14],
-            "handover_count": final[15],
-            "events": final[16],
-            "sleeping": (final[10] >= 0).sum(),
-            "grant_value": final[4],  # full memory; callers slice what they need
+            "acquisitions": final.acq,
+            "waited_acquisitions": final.waited_acq,
+            "handover_sum": final.hand_sum,
+            "handover_count": final.hand_cnt,
+            "events": final.events,
+            "sleeping": (final.spin_addr >= 0).sum(),
+            "grant_value": final.mem,  # full memory; callers slice what they need
         }
 
-    return jax.jit(run, static_argnames=())
+    return run
+
+
+def _make_run_batched(n_threads: int, mem_words: int, n_locks: int):
+    """Batched driver: ONE while loop over a ``jax.vmap`` of the step.
+
+    Running ``vmap`` *inside* the loop (rather than vmapping the whole
+    single-cell driver) avoids the per-lane full-state select a batched
+    ``lax.while_loop`` would otherwise emit every iteration: the step is
+    self-guarding (finished lanes dispatch the no-event pseudo-op and are
+    exact identities), so the loop simply runs until every lane is done.
+    """
+    n_lines = mem_words // isa.WORDS_PER_SECTOR
+
+    def run(program, init_pc, init_regs, init_mem, n_active, seed,
+            horizon, max_events, costs, wa_base, wa_mask, wa_size):
+        n_cells = program.shape[0]
+        c = SimConsts(program=program, costs=costs,
+                      wa_base=wa_base, wa_mask=wa_mask, wa_size=wa_size,
+                      horizon=horizon, max_events=max_events)
+        lane_t = jnp.arange(n_threads)[None, :]
+        s0 = SimState(
+            next_time=jnp.where(lane_t < n_active[:, None], 0, INF
+                                ).astype(jnp.int32),
+            pc=init_pc.astype(jnp.int32),
+            regs=init_regs.astype(jnp.int32),
+            prng=(seed[:, None].astype(jnp.uint32)
+                  + lane_t.astype(jnp.uint32) * jnp.uint32(2654435761)),
+            mem=init_mem.astype(jnp.int32),
+            sharers=jnp.zeros((n_cells, n_lines, n_threads), bool),
+            dirty=jnp.full((n_cells, n_lines), -1, jnp.int32),
+            pend_addr=jnp.full((n_cells, n_threads), -1, jnp.int32),
+            pend_val=jnp.zeros((n_cells, n_threads), jnp.int32),
+            pend_time=jnp.zeros((n_cells, n_threads), jnp.int32),
+            spin_addr=jnp.full((n_cells, n_threads), -1, jnp.int32),
+            acq=jnp.zeros((n_cells, n_threads), jnp.int32),
+            waited_acq=jnp.zeros((n_cells, n_threads), jnp.int32),
+            rel_time=jnp.full((n_cells, n_locks), -1, jnp.int32),
+            hand_sum=jnp.zeros(n_cells, jnp.int32),
+            hand_cnt=jnp.zeros(n_cells, jnp.int32),
+            events=jnp.zeros(n_cells, jnp.int32),
+        )
+        vstep = jax.vmap(_step)
+
+        def cond(s: SimState):
+            t_th = s.next_time.min(1)
+            t_cm = jnp.where(s.pend_addr >= 0, s.pend_time, INF).min(1)
+            return jnp.any((s.events < c.max_events)
+                           & (jnp.minimum(t_th, t_cm) < c.horizon))
+
+        final = jax.lax.while_loop(cond, functools.partial(vstep, c), s0)
+        return {
+            "acquisitions": final.acq,
+            "waited_acquisitions": final.waited_acq,
+            "handover_sum": final.hand_sum,
+            "handover_count": final.hand_cnt,
+            "events": final.events,
+            "sleeping": (final.spin_addr >= 0).sum(1),
+            "grant_value": final.mem,
+        }
+
+    return run
+
+
+def _make_run_map(n_threads: int, mem_words: int, n_locks: int):
+    """Batched driver variant: ``lax.map`` of the single-cell driver.
+
+    Same one-compile-per-sweep property and identical results as the vmapped
+    driver, but cells execute sequentially inside the compiled program.  On
+    CPU this wins: a lane-parallel sweep costs ``max(events) × B`` lane-steps
+    (idle lanes still pay the switch) while the sequential map costs
+    ``sum(events)`` — and scalar XLA scatters see no SIMD benefit anyway.
+    """
+    run = _make_run(n_threads, mem_words, n_locks)
+
+    def run_map(*args):
+        return jax.lax.map(lambda cell: run(*cell), args)
+
+    return run_map
+
+
+@functools.lru_cache(maxsize=64)
+def _build_engine(n_threads: int, mem_words: int, n_locks: int, prog_len: int,
+                  batched: str | None = None):
+    """Compile an engine for a given shape set (everything else is an input).
+
+    The cache key is shapes only; ``prog_len`` rides along for cache identity
+    even though jit would also specialize on it.  ``batched`` selects the
+    sweep driver ("vmap" = lane-parallel, "map" = sequential cells); either
+    way a sweep is one compile and one dispatch, not one per cell.
+    """
+    if batched == "vmap":
+        return jax.jit(_make_run_batched(n_threads, mem_words, n_locks))
+    if batched == "map":
+        return jax.jit(_make_run_map(n_threads, mem_words, n_locks))
+    assert batched is None, batched
+    return jax.jit(_make_run(n_threads, mem_words, n_locks))
+
+
+def engine_cache_info():
+    """Compile-cache statistics (for tests asserting compile counts)."""
+    return _build_engine.cache_info()
 
 
 def run_sim(program: np.ndarray, *, n_threads: int, mem_words: int,
             n_locks: int, init_pc: np.ndarray, init_regs: np.ndarray,
             wa_base: int, wa_size: int, horizon: int = 2_000_000,
             max_events: int = 2_000_000, seed: int = 1,
-            costs: Costs = DEFAULT_COSTS) -> dict:
-    """Run a lockVM program; returns python-side stats."""
+            costs: Costs = DEFAULT_COSTS, init_mem: np.ndarray | None = None,
+            n_active: int | None = None) -> dict:
+    """Run a single lockVM program; returns python-side stats.
+
+    Thin single-cell wrapper kept for backward compatibility; sweeps should
+    go through :func:`run_sweep` (one compile, one dispatch for all cells).
+    """
     assert wa_size & (wa_size - 1) == 0
-    prog_len = 256
-    assert len(program) <= prog_len, f"program too long: {len(program)}"
-    if len(program) < prog_len:
-        pad = np.zeros((prog_len - len(program), 5), np.int32)
-        pad[:, 0] = isa.HALT
-        program = np.concatenate([program, pad])
-    engine = _build_engine(n_threads, mem_words, n_locks, prog_len,
-                           wa_base, wa_size - 1, wa_size)
+    prog_len = PROG_LEN
+    program = pad_program(program, prog_len)
+    if init_mem is None:
+        init_mem = np.zeros(mem_words, np.int32)
+    if n_active is None:
+        n_active = n_threads
+    engine = _build_engine(n_threads, mem_words, n_locks, prog_len)
     out = engine(jnp.asarray(program), jnp.asarray(init_pc),
-                 jnp.asarray(init_regs), jnp.uint32(seed),
+                 jnp.asarray(init_regs), jnp.asarray(init_mem),
+                 jnp.int32(n_active), jnp.uint32(seed),
                  jnp.int32(horizon), jnp.int32(max_events),
-                 jnp.asarray(costs.to_array()))
+                 jnp.asarray(costs.to_array()),
+                 jnp.int32(wa_base), jnp.int32(wa_size - 1),
+                 jnp.int32(wa_size))
     mem = np.asarray(out.pop("grant_value"))
     res = {k: np.asarray(v) for k, v in out.items()}
     res["mem"] = mem
@@ -445,3 +647,88 @@ def run_sim(program: np.ndarray, *, n_threads: int, mem_words: int,
     hc = int(res["handover_count"])
     res["avg_handover"] = float(res["handover_sum"]) / hc if hc else float("nan")
     return res
+
+
+def _broadcast_cells(x, n_cells: int, dtype) -> np.ndarray:
+    arr = np.asarray(x, dtype)
+    if arr.ndim == 0:
+        arr = np.full(n_cells, arr, dtype)
+    assert arr.shape == (n_cells,), (arr.shape, n_cells)
+    return arr
+
+
+def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
+              init_pc: np.ndarray, init_regs: np.ndarray,
+              n_active, seeds, wa_base, wa_size,
+              horizon, max_events=2_000_000, costs=None,
+              init_mem: np.ndarray | None = None,
+              mode: str = "auto") -> dict:
+    """Run a batch of independent simulations as ONE compiled, vmapped call.
+
+    Every per-cell argument carries a leading batch axis of size B; scalars
+    broadcast.  All cells must share the padded shapes ``(n_threads,
+    mem_words, n_locks, prog_len)`` — pad programs/threads/memory to the
+    sweep-wide maximum (see ``repro.sim.programs`` helpers) and mark padded
+    threads inactive via ``n_active``.
+
+    Args:
+      programs:  (B, prog_len, 5) int32.
+      mem_words: padded memory size shared by every cell.
+      n_locks:   padded lock-table size shared by every cell.
+      init_pc:   (B, n_threads) int32.
+      init_regs: (B, n_threads, N_REGS) int32.
+      n_active:  (B,) or scalar — threads beyond this index never run.
+      seeds:     (B,) or scalar uint32.
+      wa_base/wa_size: (B,) or scalar waiting-array geometry (wa_size must be
+        a power of two; the engine derives the mask).
+      horizon/max_events: (B,) or scalar int32.
+      costs:     Costs, (9,) array, or (B, 9) array; default DEFAULT_COSTS.
+      init_mem:  (B, mem_words) int32 or None for all-zeros.
+      mode:      "vmap" runs all cells lane-parallel (best on accelerators),
+        "map" runs them sequentially inside one compiled program (best on
+        CPU — no idle-lane cost), "auto" picks by backend.  Results are
+        bit-identical across modes.
+
+    Returns a dict of stacked numpy arrays: per-thread stats have shape
+    (B, n_threads), scalars (B,), and ``grant_value`` (B, mem_words) holds
+    each cell's final memory.
+    """
+    if mode == "auto":
+        mode = "map" if jax.default_backend() == "cpu" else "vmap"
+    assert mode in ("vmap", "map"), mode
+    programs = np.asarray(programs, np.int32)
+    assert programs.ndim == 3 and programs.shape[2] == 5, programs.shape
+    n_cells, prog_len = programs.shape[0], programs.shape[1]
+    init_pc = np.asarray(init_pc, np.int32)
+    init_regs = np.asarray(init_regs, np.int32)
+    n_threads = init_pc.shape[1]
+    assert init_pc.shape == (n_cells, n_threads)
+    assert init_regs.shape[:2] == (n_cells, n_threads)
+
+    wa_size_arr = _broadcast_cells(wa_size, n_cells, np.int32)
+    assert (wa_size_arr & (wa_size_arr - 1) == 0).all(), "wa_size must be pow2"
+    if costs is None:
+        costs = DEFAULT_COSTS
+    if isinstance(costs, Costs):
+        costs = costs.to_array()
+    costs = np.asarray(costs, np.int32)
+    if costs.ndim == 1:
+        costs = np.broadcast_to(costs, (n_cells, 9))
+    if init_mem is None:
+        init_mem = np.zeros((n_cells, mem_words), np.int32)
+    init_mem = np.asarray(init_mem, np.int32)
+    assert init_mem.shape == (n_cells, mem_words), init_mem.shape
+
+    engine = _build_engine(n_threads, mem_words, n_locks, prog_len,
+                           batched=mode)
+    out = engine(jnp.asarray(programs), jnp.asarray(init_pc),
+                 jnp.asarray(init_regs), jnp.asarray(init_mem),
+                 jnp.asarray(_broadcast_cells(n_active, n_cells, np.int32)),
+                 jnp.asarray(_broadcast_cells(seeds, n_cells, np.uint32)),
+                 jnp.asarray(_broadcast_cells(horizon, n_cells, np.int32)),
+                 jnp.asarray(_broadcast_cells(max_events, n_cells, np.int32)),
+                 jnp.asarray(costs),
+                 jnp.asarray(_broadcast_cells(wa_base, n_cells, np.int32)),
+                 jnp.asarray(wa_size_arr - 1),
+                 jnp.asarray(wa_size_arr))
+    return {k: np.asarray(v) for k, v in out.items()}

@@ -24,6 +24,8 @@ from .isa import (ACQ, ADDI, ANDI, Asm, BEQ, BEQI, BGTI, BLEI, BNEI, CASZ,
 
 LT_THRESHOLD = 1  # the paper's LongTermThreshold
 
+PROG_LEN = 256  # canonical padded program length (one engine shape for all)
+
 
 @dataclass
 class Layout:
@@ -46,6 +48,49 @@ class Layout:
         n_arrays = self.n_locks if self.private_arrays else 1
         w = self.wa_base + self.wa_size * n_arrays
         return (w + WORDS_PER_SECTOR - 1) // WORDS_PER_SECTOR * WORDS_PER_SECTOR
+
+
+# --------------------------------------------------------------------------
+# Shape canonicalization.  A sweep shares ONE engine compile iff every cell
+# presents identical array shapes; these helpers pad a cell's program /
+# threads / memory up to the sweep-wide maxima.  Padded threads are masked
+# inactive by the engine (next_time = INF forever), so padding never changes
+# a cell's event sequence.
+# --------------------------------------------------------------------------
+
+def pad_program(program: np.ndarray, prog_len: int = PROG_LEN) -> np.ndarray:
+    """Pad a program to the canonical length with HALT rows."""
+    program = np.asarray(program, np.int32)
+    assert len(program) <= prog_len, f"program too long: {len(program)}"
+    if len(program) < prog_len:
+        pad = np.zeros((prog_len - len(program), 5), np.int32)
+        pad[:, 0] = HALT
+        program = np.concatenate([program, pad])
+    return program
+
+
+def pad_threads(pc: np.ndarray, regs: np.ndarray,
+                n_threads: int) -> tuple[np.ndarray, np.ndarray]:
+    """Pad per-thread init state up to a sweep-wide thread count."""
+    pc = np.asarray(pc, np.int32)
+    regs = np.asarray(regs, np.int32)
+    t = len(pc)
+    assert t <= n_threads, (t, n_threads)
+    if t < n_threads:
+        pc = np.concatenate([pc, np.zeros(n_threads - t, np.int32)])
+        regs = np.concatenate(
+            [regs, np.zeros((n_threads - t, regs.shape[1]), np.int32)])
+    return pc, regs
+
+
+def pad_mem(init_mem: np.ndarray, mem_words: int) -> np.ndarray:
+    """Pad initial memory contents up to a sweep-wide memory size."""
+    init_mem = np.asarray(init_mem, np.int32)
+    assert len(init_mem) <= mem_words, (len(init_mem), mem_words)
+    if len(init_mem) < mem_words:
+        init_mem = np.concatenate(
+            [init_mem, np.zeros(mem_words - len(init_mem), np.int32)])
+    return init_mem
 
 
 # --------------------------------------------------------------------------
@@ -273,7 +318,62 @@ def gen_partitioned_release(asm: Asm, tag: str) -> None:
     asm.emit(STORE, R_AT, R_K, 0, OFF_PGRANTS)
 
 
+def gen_anderson_acquire(asm: Asm, tag: str, layout: Layout) -> None:
+    """Anderson's array-based queue lock on the lockVM.
+
+    Boolean flags live in the waiting-array region, one slot per ticket via
+    the TWA hash: ×127 is a unit modulo ``wa_size``, so the ≤ n_threads
+    concurrent tickets (which span far less than ``wa_size``) never collide —
+    the hash serves as Anderson's ``tx % size`` slot map with the sector
+    spreading thrown in for free.  Flag convention: nonzero = "go"; the
+    winner zeroes its slot on entry (consume) so the slot is clean when
+    ticket tx + wa_size wraps around to it.
+    """
+    asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
+    asm.emit(_hash_op(layout), R_AT, R_TX,
+             R_LIDX if layout.private_arrays else R_LOCK)
+    asm.emit(LOAD, R_U, R_AT, 0, 0)
+    asm.emit(BNEI, R_U, 0, 0, f"{tag}_fast")     # flag already granted
+    asm.emit(SPIN_NEI, 0, R_AT, 0, 0)            # park till my flag != 0
+    asm.emit(STOREI, R_AT, 0, 0, 0)              # consume the grant
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(STOREI, R_AT, 0, 0, 0)
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_anderson_release(asm: Asm, tag: str, layout: Layout) -> None:
+    asm.emit(ADDI, R_K, R_TX, 0, 1)
+    asm.emit(_hash_op(layout), R_AT, R_K,
+             R_LIDX if layout.private_arrays else R_LOCK)
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STOREI, R_AT, 1, 0, 0)              # flags[next] = 1 (handover)
+
+
+def anderson_init_mem(layout: Layout) -> np.ndarray:
+    """Initial memory for Anderson: the slot of ticket 0 pre-granted (the
+    classic ``flags[0] = 1``), per lock."""
+    mem = np.zeros(layout.mem_words, np.int32)
+    mask = layout.wa_size - 1
+    for lidx in range(layout.n_locks):
+        if layout.private_arrays:
+            at = layout.wa_base + lidx * layout.wa_size  # HASHP(tx=0) -> 0
+        else:
+            at = layout.wa_base + (((0 * 127) ^ (lidx * LOCK_STRIDE)) & mask)
+        mem[at] = 1
+    return mem
+
+
+# Locks whose programs need nonzero initial memory contents.
+INIT_MEM_GEN = {
+    "anderson": anderson_init_mem,
+}
+
+
 ACQUIRE_GEN = {
+    "anderson": gen_anderson_acquire,
     "ticket": lambda asm, tag, layout: gen_ticket_acquire(asm, tag),
     "twa": gen_twa_acquire,
     "mcs": lambda asm, tag, layout: gen_mcs_acquire(asm, tag),
@@ -284,6 +384,7 @@ ACQUIRE_GEN = {
 }
 
 RELEASE_GEN = {
+    "anderson": gen_anderson_release,
     "ticket": lambda asm, tag, layout: gen_ticket_release(asm, tag),
     "twa": gen_twa_release,
     "mcs": lambda asm, tag, layout: gen_mcs_release(asm, tag),
@@ -315,6 +416,10 @@ def build_mutexbench(lock: str, layout: Layout, *, cs_work: int = 4,
     cs_rand=(lo, spread) (Fig 6).  CS/NCS are "PRNG steps" as in the paper,
     charged at `work_scale` cycles per step.
     """
+    if lock == "anderson" and layout.n_locks > 1 and not layout.private_arrays:
+        # A cross-lock hash collision on a *boolean* flag array would grant
+        # two owners at once; Anderson arrays are per-lock by definition.
+        raise ValueError("anderson requires private_arrays when n_locks > 1")
     asm = Asm()
     asm.label("top")
     if layout.n_locks > 1:

@@ -1,68 +1,235 @@
-"""Benchmark workloads on the lockVM, one per paper figure."""
+"""Benchmark workloads on the lockVM, one per paper figure.
+
+Sweep-first API: a :class:`SweepSpec` names the axes of a figure (lock ×
+threads × seeds × cs_work × private_arrays × costs) and :func:`run_sweep`
+executes the whole cartesian product as ONE compiled, vmapped engine call.
+Every cell is padded to the sweep-wide maximum shapes (threads, memory,
+program length), so the entire sweep hits a single ``_build_engine`` cache
+entry instead of one compile per thread count.  ``run_contention`` /
+``median_throughput`` / ``mutexbench_curve`` are thin layers over it.
+"""
 
 from __future__ import annotations
 
+import itertools
+from dataclasses import dataclass, replace
+
 import numpy as np
 
+from . import engine
 from .costs import DEFAULT_COSTS, Costs
 from .engine import run_sim
-from .programs import (Layout, build_invalidation_diameter, build_mutexbench,
-                       init_state)
+from .programs import (INIT_MEM_GEN, Layout, PROG_LEN,
+                       build_invalidation_diameter, build_mutexbench,
+                       init_state, pad_mem, pad_program, pad_threads)
 
 DEFAULT_HORIZON = 1_500_000
+DEFAULT_MAX_EVENTS = 2_000_000
+
+
+def _as_tuple(x) -> tuple:
+    """Normalize a scalar-or-sequence axis value to a tuple."""
+    if isinstance(x, (list, tuple)):
+        return tuple(x)
+    return (x,)
+
+
+@dataclass(frozen=True)
+class SweepCell:
+    """One concrete point of a sweep (all axes resolved)."""
+
+    lock: str
+    n_threads: int
+    seed: int
+    cs_work: int
+    private_arrays: bool
+    costs: Costs
+
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """Declarative description of a lockVM parameter sweep.
+
+    The first six fields are *axes*: each accepts a single value or a
+    sequence, and :meth:`cells` yields their cartesian product in field
+    order (locks outermost, costs innermost).  The remaining fields are
+    scalar knobs shared by every cell.
+    """
+
+    locks: tuple | str = ("ticket", "twa", "mcs")
+    threads: tuple | int = (1, 2, 4, 8, 16, 32, 64)
+    seeds: tuple | int = (1, 2, 3)
+    cs_work: tuple | int = 4
+    private_arrays: tuple | bool = False
+    costs: tuple | Costs = DEFAULT_COSTS
+    ncs_max: int = 200
+    cs_rand: tuple | None = None
+    n_locks: int = 1
+    horizon: int = DEFAULT_HORIZON
+    max_events: int = DEFAULT_MAX_EVENTS
+    wa_size: int = 4096
+
+    def cells(self) -> list[SweepCell]:
+        return [SweepCell(lock=lk, n_threads=t, seed=s, cs_work=cw,
+                          private_arrays=pa, costs=co)
+                for lk, t, s, cw, pa, co in itertools.product(
+                    _as_tuple(self.locks), _as_tuple(self.threads),
+                    _as_tuple(self.seeds), _as_tuple(self.cs_work),
+                    _as_tuple(self.private_arrays), _as_tuple(self.costs))]
+
+    def layout_for(self, cell: SweepCell) -> Layout:
+        return Layout(n_threads=cell.n_threads, n_locks=self.n_locks,
+                      wa_size=self.wa_size, private_arrays=cell.private_arrays)
+
+
+def run_sweep(spec: SweepSpec, *, mode: str = "auto") -> list[dict]:
+    """Run every cell of ``spec`` in one compiled call.
+
+    Returns one dict per cell, in :meth:`SweepSpec.cells` order.  Each dict
+    carries the cell coordinates (``lock``, ``n_threads``, ``seed``,
+    ``cs_work``, ``private_arrays``) plus the same stats ``run_sim``
+    produces (``throughput``, ``acquisitions``, ``avg_handover``, ``mem``,
+    ...), with per-thread arrays sliced to the cell's real thread count.
+    ``mode`` selects the batched execution strategy (see
+    :func:`repro.sim.engine.run_sweep`); results are mode-independent.
+    """
+    cells = spec.cells()
+    built = []
+    for cell in cells:
+        layout = spec.layout_for(cell)
+        prog = build_mutexbench(cell.lock, layout, cs_work=cell.cs_work,
+                                ncs_max=spec.ncs_max, cs_rand=spec.cs_rand)
+        pc, regs = init_state(layout)
+        gen_mem = INIT_MEM_GEN.get(cell.lock)
+        init_mem = gen_mem(layout) if gen_mem else np.zeros(layout.mem_words,
+                                                            np.int32)
+        built.append((layout, prog, pc, regs, init_mem))
+
+    t_max = max(layout.n_threads for layout, *_ in built)
+    m_max = max(layout.mem_words for layout, *_ in built)
+    padded = [pad_threads(pc, regs, t_max) for _, _, pc, regs, _ in built]
+    raw = engine.run_sweep(
+        np.stack([pad_program(prog) for _, prog, *_ in built]),
+        mem_words=m_max, n_locks=spec.n_locks,
+        init_pc=np.stack([pc for pc, _ in padded]),
+        init_regs=np.stack([regs for _, regs in padded]),
+        n_active=np.asarray([layout.n_threads for layout, *_ in built]),
+        seeds=np.asarray([cell.seed for cell in cells], np.uint32),
+        wa_base=np.asarray([layout.wa_base for layout, *_ in built]),
+        wa_size=spec.wa_size, horizon=spec.horizon,
+        max_events=spec.max_events,
+        costs=np.stack([cell.costs.to_array() for cell in cells]),
+        init_mem=np.stack([pad_mem(init_mem, m_max)
+                           for *_, init_mem in built]),
+        mode=mode,
+    )
+
+    results = []
+    for i, (cell, (layout, *_)) in enumerate(zip(cells, built)):
+        t = layout.n_threads
+        res = {
+            "lock": cell.lock, "n_threads": t, "seed": cell.seed,
+            "cs_work": cell.cs_work, "private_arrays": cell.private_arrays,
+            "costs": cell.costs,
+            "acquisitions": raw["acquisitions"][i, :t],
+            "waited_acquisitions": raw["waited_acquisitions"][i, :t],
+            "handover_sum": raw["handover_sum"][i],
+            "handover_count": raw["handover_count"][i],
+            "events": raw["events"][i],
+            "sleeping": raw["sleeping"][i],
+            "mem": raw["grant_value"][i, :layout.mem_words],
+            "horizon": spec.horizon,
+        }
+        res["throughput"] = float(res["acquisitions"].sum()) / spec.horizon
+        hc = int(res["handover_count"])
+        res["avg_handover"] = (float(res["handover_sum"]) / hc if hc
+                               else float("nan"))
+        results.append(res)
+    return results
+
+
+def sweep_curves(spec: SweepSpec, value: str = "throughput") -> dict:
+    """Collapse a sweep to ``{lock: [median-over-seeds per thread count]}``.
+
+    Medians are over the seeds axis (the paper reports the median of 5-7
+    runs); any cs_work/private_arrays/costs axes must be singletons.
+    """
+    assert len(_as_tuple(spec.cs_work)) == 1
+    assert len(_as_tuple(spec.private_arrays)) == 1
+    assert len(_as_tuple(spec.costs)) == 1
+    results = run_sweep(spec)
+    by_cell = {(r["lock"], r["n_threads"], r["seed"]): r[value]
+               for r in results}
+    return {lock: [float(np.median([by_cell[lock, t, s]
+                                    for s in _as_tuple(spec.seeds)]))
+                   for t in _as_tuple(spec.threads)]
+            for lock in _as_tuple(spec.locks)}
 
 
 def run_contention(lock: str, n_threads: int, *, cs_work: int = 4,
                    ncs_max: int = 200, cs_rand: tuple | None = None,
                    n_locks: int = 1, private_arrays: bool = False,
                    horizon: int = DEFAULT_HORIZON, seed: int = 1,
-                   costs: Costs = DEFAULT_COSTS, max_events: int = 2_000_000) -> dict:
+                   costs: Costs = DEFAULT_COSTS,
+                   max_events: int = DEFAULT_MAX_EVENTS) -> dict:
     """One MutexBench-style cell: throughput + handover stats."""
-    layout = Layout(n_threads=n_threads, n_locks=n_locks,
-                    private_arrays=private_arrays)
-    prog = build_mutexbench(lock, layout, cs_work=cs_work, ncs_max=ncs_max,
-                            cs_rand=cs_rand)
-    pc, regs = init_state(layout)
-    return run_sim(prog, n_threads=n_threads, mem_words=layout.mem_words,
-                   n_locks=n_locks, init_pc=pc, init_regs=regs,
-                   wa_base=layout.wa_base, wa_size=layout.wa_size,
-                   horizon=horizon, max_events=max_events, seed=seed,
-                   costs=costs)
+    spec = SweepSpec(locks=lock, threads=n_threads, seeds=seed,
+                     cs_work=cs_work, private_arrays=private_arrays,
+                     costs=costs, ncs_max=ncs_max, cs_rand=cs_rand,
+                     n_locks=n_locks, horizon=horizon, max_events=max_events)
+    return run_sweep(spec)[0]
 
 
-def median_throughput(lock: str, n_threads: int, *, runs: int = 3, **kw) -> float:
+def median_throughput(lock: str, n_threads: int, *, runs: int = 3,
+                      **kw) -> float:
     """Median over seeds (paper uses median of 5-7 runs)."""
-    vals = [run_contention(lock, n_threads, seed=s + 1, **kw)["throughput"]
-            for s in range(runs)]
+    spec = SweepSpec(locks=lock, threads=n_threads,
+                     seeds=tuple(range(1, runs + 1)), **kw)
+    vals = [r["throughput"] for r in run_sweep(spec)]
     return float(np.median(vals))
 
 
 def mutexbench_curve(locks=("ticket", "twa", "mcs"),
                      threads=(1, 2, 4, 8, 16, 32, 64), *, runs: int = 3,
                      **kw) -> dict[str, list[float]]:
-    """Fig 3: throughput vs thread count per lock algorithm."""
-    return {lock: [median_throughput(lock, t, runs=runs, **kw) for t in threads]
-            for lock in locks}
+    """Fig 3: throughput vs thread count per lock algorithm — one compile,
+    one device dispatch for the whole figure."""
+    spec = SweepSpec(locks=tuple(locks), threads=tuple(threads),
+                     seeds=tuple(range(1, runs + 1)), **kw)
+    return sweep_curves(spec)
 
 
 def fig1_invalidation_diameter(reader_counts=(0, 1, 3, 7, 15, 31, 63),
-                               *, horizon: int = 300_000, seed: int = 1) -> list[float]:
-    """Fig 1: writer FADD throughput vs number of polling readers."""
-    out = []
-    prog_and_entry = build_invalidation_diameter()
-    prog, reader_pc = prog_and_entry
-    for readers in reader_counts:
-        T = readers + 1
-        layout = Layout(n_threads=T, n_locks=1)
-        entries = np.full(T, reader_pc, np.int32)
+                               *, horizon: int = 300_000,
+                               seed: int = 1) -> list[float]:
+    """Fig 1: writer FADD throughput vs number of polling readers.
+
+    All reader counts are batched into one vmapped engine call: thread 0 is
+    the writer, padded threads beyond ``readers + 1`` stay inactive.
+    """
+    prog, reader_pc = build_invalidation_diameter()
+    t_max = max(reader_counts) + 1
+    layouts = [Layout(n_threads=r + 1, n_locks=1) for r in reader_counts]
+    m_max = max(layout.mem_words for layout in layouts)
+    pcs, regss = [], []
+    for layout in layouts:
+        entries = np.full(layout.n_threads, reader_pc, np.int32)
         entries[0] = 0  # thread 0 is the writer
         pc, regs = init_state(layout, entries)
-        res = run_sim(prog, n_threads=T, mem_words=layout.mem_words,
-                      n_locks=1, init_pc=pc, init_regs=regs,
-                      wa_base=layout.wa_base, wa_size=layout.wa_size,
-                      horizon=horizon, max_events=3_000_000, seed=seed)
-        out.append(float(res["acquisitions"][0]) / horizon)
-    return out
+        pc, regs = pad_threads(pc, regs, t_max)
+        pcs.append(pc)
+        regss.append(regs)
+    raw = engine.run_sweep(
+        np.stack([pad_program(prog)] * len(layouts)),
+        mem_words=m_max, n_locks=1,
+        init_pc=np.stack(pcs), init_regs=np.stack(regss),
+        n_active=np.asarray([layout.n_threads for layout in layouts]),
+        seeds=np.uint32(seed),
+        wa_base=np.asarray([layout.wa_base for layout in layouts]),
+        wa_size=layouts[0].wa_size, horizon=horizon, max_events=3_000_000,
+    )
+    return [float(raw["acquisitions"][i, 0]) / horizon
+            for i in range(len(layouts))]
 
 
 def fig2_interlock_interference(pool_sizes=(1, 4, 16, 64, 256, 1024),
@@ -73,15 +240,18 @@ def fig2_interlock_interference(pool_sizes=(1, 4, 16, 64, 256, 1024),
     The paper sweeps 1..8192 locks on real hardware; we sweep to 1024 (memory
     for per-lock private arrays bounds the idealized variant).  <1.0 means
     inter-lock collisions/false-sharing cost; paper's worst case is ~8%.
+    Each pool size is one sweep over the (private_arrays × seeds) axes.
     """
     ratios = []
     for n_locks in pool_sizes:
-        shared = np.median([run_contention(
-            "twa", n_threads, n_locks=n_locks, cs_work=50, ncs_max=100,
-            horizon=horizon, seed=s + 1)["throughput"] for s in range(runs)])
-        private = np.median([run_contention(
-            "twa", n_threads, n_locks=n_locks, cs_work=50, ncs_max=100,
-            private_arrays=True, horizon=horizon, seed=s + 1)["throughput"]
-            for s in range(runs)])
+        spec = SweepSpec(locks="twa", threads=n_threads,
+                         seeds=tuple(range(1, runs + 1)), cs_work=50,
+                         private_arrays=(False, True), ncs_max=100,
+                         n_locks=n_locks, horizon=horizon)
+        results = run_sweep(spec)
+        shared = np.median([r["throughput"] for r in results
+                            if not r["private_arrays"]])
+        private = np.median([r["throughput"] for r in results
+                             if r["private_arrays"]])
         ratios.append(float(shared / private))
     return ratios

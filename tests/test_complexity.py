@@ -1,0 +1,29 @@
+"""Deterministic Table-1 complexity checks (no hypothesis dependency —
+these must run even when the property-test extras are absent)."""
+
+from repro.core.complexity import cyclomatic, npath, table1
+
+
+def test_complexity_table_matches_paper_ordering():
+    """Table 1's *ordering* claim: unlock complexity is 1 for all; TWA's lock
+    path is more complex than ticket but of the same small order (the paper's
+    contrast is TWA=6 vs qspinlock=18 cyclomatic)."""
+    rows = {r.algorithm: r for r in table1()}
+    # Table 1 covers ticket/qspinlock/TWA; MCS unlock is branchy by design.
+    for name in ("ticket", "twa"):
+        assert rows[name].cyclomatic_unlock == 1
+        assert rows[name].npath_unlock == 1
+    assert rows["ticket"].cyclomatic_lock == 2  # exactly the paper's value
+    assert rows["ticket"].cyclomatic_lock < rows["twa"].cyclomatic_lock <= 10
+    assert rows["ticket"].npath_lock < rows["twa"].npath_lock
+
+
+def test_cyclomatic_counts_decisions():
+    def f(x):
+        if x > 0:
+            while x:
+                x -= 1
+        return x
+
+    assert cyclomatic(f) == 3
+    assert npath(f) >= 3

@@ -1,13 +1,12 @@
 """Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
-(interpret mode on CPU) + hypothesis property tests on ticketing invariants.
-"""
+(interpret mode on CPU).  The hypothesis property tests on ticketing
+invariants live in test_kernels_properties.py (skipped when hypothesis is
+not installed)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.kernels.mamba_scan.kernel import selective_scan_pallas
 from repro.kernels.mamba_scan.ref import selective_scan_ref
@@ -43,20 +42,6 @@ def test_ticket_dispatch_single_expert_is_iota():
     ids = jnp.zeros((50,), jnp.int32)
     got = ticket_dispatch_pallas(ids, 1, block_n=16)
     np.testing.assert_array_equal(np.asarray(got), np.arange(50))
-
-
-@given(n=st.integers(1, 300), e=st.integers(1, 16), seed=st.integers(0, 99))
-@settings(max_examples=20, deadline=None)
-def test_ticket_properties(n, e, seed):
-    """FIFO-doorway invariants: per-expert tickets are 0..count-1, dense,
-    and increase with arrival order (strict FIFO)."""
-    rng = np.random.default_rng(seed)
-    ids = rng.integers(0, e, size=(n,)).astype(np.int32)
-    t = np.asarray(ticket_ref(jnp.asarray(ids), e))
-    for ex in range(e):
-        mine = t[ids == ex]
-        np.testing.assert_array_equal(np.sort(mine), np.arange(len(mine)))
-        np.testing.assert_array_equal(mine, np.sort(mine))  # arrival order
 
 
 def test_capacity_drop_is_fifo_fair():
@@ -138,18 +123,6 @@ def test_rglru_matches_oracle(L, D, l_chunk, dtype):
                                atol=tol, rtol=tol)
     np.testing.assert_allclose(np.asarray(h1, np.float32), np.asarray(h2),
                                atol=tol, rtol=tol)
-
-
-@given(L=st.integers(1, 80), D=st.integers(1, 40), seed=st.integers(0, 50))
-@settings(max_examples=15, deadline=None)
-def test_rglru_property_random_shapes(L, D, seed):
-    rng = np.random.default_rng(seed)
-    a = jnp.asarray(rng.uniform(0.2, 0.99, size=(L, D)), jnp.float32)
-    b = jnp.asarray(rng.normal(size=(L, D)), jnp.float32)
-    y1, h1 = rglru_scan_pallas(a, b, l_chunk=32)
-    y2, h2 = rglru_scan_ref(a, b)
-    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
-                               rtol=1e-4)
 
 
 def test_rglru_gates_bounded():

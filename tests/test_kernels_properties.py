@@ -1,0 +1,42 @@
+"""Hypothesis property tests on the Pallas kernels (ticketing FIFO
+invariants, RG-LRU random shapes).  Skipped wholesale when hypothesis is
+not installed; the deterministic oracle tests live in test_kernels.py."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.kernels.rglru.kernel import rglru_scan_pallas  # noqa: E402
+from repro.kernels.rglru.ref import rglru_scan_ref  # noqa: E402
+from repro.kernels.ticket_dispatch.ref import ticket_ref  # noqa: E402
+
+
+@given(n=st.integers(1, 300), e=st.integers(1, 16), seed=st.integers(0, 99))
+@settings(max_examples=20, deadline=None)
+def test_ticket_properties(n, e, seed):
+    """FIFO-doorway invariants: per-expert tickets are 0..count-1, dense,
+    and increase with arrival order (strict FIFO)."""
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, e, size=(n,)).astype(np.int32)
+    t = np.asarray(ticket_ref(jnp.asarray(ids), e))
+    for ex in range(e):
+        mine = t[ids == ex]
+        np.testing.assert_array_equal(np.sort(mine), np.arange(len(mine)))
+        np.testing.assert_array_equal(mine, np.sort(mine))  # arrival order
+
+
+@given(L=st.integers(1, 80), D=st.integers(1, 40), seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_rglru_property_random_shapes(L, D, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.2, 0.99, size=(L, D)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(L, D)), jnp.float32)
+    y1, h1 = rglru_scan_pallas(a, b, l_chunk=32)
+    y2, h2 = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)

@@ -3,20 +3,39 @@
 Horizons are kept small for CI speed; the benchmarks/ modules run the full
 curves.  All claims are *shape/crossover* claims, as the simulator is
 calibrated to coherence-cost ratios, not to the X5-2's absolute ops/s.
+
+Sweep-first: each figure's cells run as ONE vmapped engine call via
+SweepSpec/run_sweep, so the whole module costs a handful of compiles.
 """
 
 import numpy as np
 import pytest
 
-from repro.sim import fig1_invalidation_diameter, run_contention
+from repro.sim import (SIM_LOCKS, SweepSpec, fig1_invalidation_diameter,
+                       run_contention, run_sweep)
 from repro.sim.isa import OFF_GRANT, OFF_TICKET
 from repro.sim.programs import Layout
 
 H = 800_000  # cycles
 
 
-def tput(lock, T, **kw):
-    return run_contention(lock, T, horizon=H, **kw)["throughput"]
+def _index(results):
+    return {(r["lock"], r["n_threads"]): r for r in results}
+
+
+@pytest.fixture(scope="module")
+def fig3(request):
+    """One sweep covering every (lock, T) cell the Fig-3 tests touch."""
+    spec = SweepSpec(locks=("ticket", "twa", "mcs"),
+                     threads=(1, 2, 4, 8, 16, 64), seeds=1, horizon=H)
+    return _index(run_sweep(spec))
+
+
+@pytest.fixture(scope="module")
+def locks16(request):
+    """One sweep: every registered lock algorithm at T=16."""
+    spec = SweepSpec(locks=tuple(SIM_LOCKS), threads=16, seeds=1, horizon=H)
+    return _index(run_sweep(spec))
 
 
 # ---------------------------------------------------------------------------
@@ -32,11 +51,13 @@ def test_fig1_writer_slows_with_readers():
 # ---------------------------------------------------------------------------
 # Figure 3 — MutexBench crossovers
 # ---------------------------------------------------------------------------
-def test_low_contention_ticket_best_twa_close():
+def test_low_contention_ticket_best_twa_close(fig3):
     """Paper: 'ticket locks perform the best up to 6 threads, with TWA
     lagging slightly behind' and both beat MCS."""
     for T in (1, 2, 4):
-        tk, tw, mc = tput("ticket", T), tput("twa", T), tput("mcs", T)
+        tk = fig3["ticket", T]["throughput"]
+        tw = fig3["twa", T]["throughput"]
+        mc = fig3["mcs", T]["throughput"]
         assert tk >= tw * 0.98, (T, tk, tw)   # ticket best (TWA within noise)
         assert tw >= tk * 0.90, (T, tk, tw)   # TWA only slightly behind
         # ticket above (or within noise of) MCS; strictly above at T=1 where
@@ -47,11 +68,11 @@ def test_low_contention_ticket_best_twa_close():
             assert tk >= mc * 0.97, (T, tk, mc)
 
 
-def test_high_contention_ticket_collapses_twa_wins():
+def test_high_contention_ticket_collapses_twa_wins(fig3):
     """Paper: ticket fails to scale; MCS stable; TWA always >= MCS."""
-    tk16, tk64 = tput("ticket", 16), tput("ticket", 64)
-    tw16, tw64 = tput("twa", 16), tput("twa", 64)
-    mc16, mc64 = tput("mcs", 16), tput("mcs", 64)
+    tk16, tk64 = (fig3["ticket", T]["throughput"] for T in (16, 64))
+    tw16, tw64 = (fig3["twa", T]["throughput"] for T in (16, 64))
+    mc16, mc64 = (fig3["mcs", T]["throughput"] for T in (16, 64))
     assert tk64 < 0.5 * tk16          # ticket collapse
     assert tw64 > 0.85 * tw16         # TWA stable asymptote
     assert mc64 > 0.85 * mc16         # MCS stable asymptote
@@ -61,25 +82,26 @@ def test_high_contention_ticket_collapses_twa_wins():
 
 
 def test_variants_ordering():
-    """Appendix: TKT-Dual better than ticket but behind TWA; TWA-ID viable."""
-    tk = tput("ticket", 48)
-    dual = tput("tkt-dual", 48)
-    tw = tput("twa", 48)
-    tid = tput("twa-id", 48)
-    assert dual > tk
-    assert tw > dual
-    assert tid > tk
+    """Appendix: TKT-Dual better than ticket but behind TWA; TWA-ID viable;
+    Anderson's local-spin array scales past ticket too."""
+    spec = SweepSpec(locks=("ticket", "tkt-dual", "twa", "twa-id", "anderson"),
+                     threads=48, seeds=1, horizon=H)
+    t48 = {r["lock"]: r["throughput"] for r in run_sweep(spec)}
+    assert t48["tkt-dual"] > t48["ticket"]
+    assert t48["twa"] > t48["tkt-dual"]
+    assert t48["twa-id"] > t48["ticket"]
+    assert t48["anderson"] > t48["ticket"]
 
 
 # ---------------------------------------------------------------------------
 # Handover latency — the mechanism behind the curves
 # ---------------------------------------------------------------------------
-def test_handover_scaling():
-    h_tk8 = run_contention("ticket", 8, horizon=H)["avg_handover"]
-    h_tk64 = run_contention("ticket", 64, horizon=H)["avg_handover"]
-    h_tw8 = run_contention("twa", 8, horizon=H)["avg_handover"]
-    h_tw64 = run_contention("twa", 64, horizon=H)["avg_handover"]
-    h_mc64 = run_contention("mcs", 64, horizon=H)["avg_handover"]
+def test_handover_scaling(fig3):
+    h_tk8 = fig3["ticket", 8]["avg_handover"]
+    h_tk64 = fig3["ticket", 64]["avg_handover"]
+    h_tw8 = fig3["twa", 8]["avg_handover"]
+    h_tw64 = fig3["twa", 64]["avg_handover"]
+    h_mc64 = fig3["mcs", 64]["avg_handover"]
     assert h_tk64 > 2.5 * h_tk8          # ticket handover grows ~linearly
     assert h_tw64 < 1.3 * h_tw8          # TWA handover flat
     assert h_tw64 < h_tk64 / 2           # TWA accelerates handover
@@ -90,27 +112,31 @@ def test_handover_scaling():
 # Correctness invariants inside the simulation
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("lock", ["ticket", "twa", "mcs", "tkt-dual",
-                                  "twa-id", "partitioned"])
-def test_conservation_and_progress(lock):
-    res = run_contention(lock, 16, horizon=H)
+                                  "twa-id", "partitioned", "anderson"])
+def test_conservation_and_progress(lock, locks16):
+    res = locks16[lock, 16]
     acq = res["acquisitions"]
     assert acq.sum() > 0
     assert acq.min() > 0                      # every thread made progress
     # FIFO admission ⇒ per-thread counts balanced (up to NCS randomness).
     assert acq.min() >= 0.9 * acq.max(), acq
+    ticket = res["mem"][OFF_TICKET]
     if lock in ("ticket", "twa", "tkt-dual", "twa-id", "partitioned"):
         if lock == "partitioned":  # grant lives in the per-sector slots
             grant = res["mem"][64:64 + 16 * 16:16].max()
         else:
             grant = res["mem"][OFF_GRANT]
-        ticket = res["mem"][OFF_TICKET]
         # every acquisition got a unique ticket; at most one holder in flight
         assert 0 <= acq.sum() - grant <= 1
         assert ticket >= acq.sum()
+    if lock == "anderson":
+        # no grant word, but tickets are unique and at most T are in flight
+        assert ticket >= acq.sum()
+        assert ticket - acq.sum() <= 16
 
 
-def test_twa_waiting_array_accounting():
-    res = run_contention("twa", 16, horizon=H)
+def test_twa_waiting_array_accounting(locks16):
+    res = locks16["twa", 16]
     layout = Layout(n_threads=16, n_locks=1)
     wa = res["mem"][layout.wa_base:layout.wa_base + layout.wa_size]
     grant = res["mem"][OFF_GRANT]
@@ -135,17 +161,23 @@ def test_interlock_interference_bounded():
     """Paper: worst-case penalty from sharing the array is < 8%; we allow
     15% headroom for the simulator's harsher collision accounting."""
     for n_locks in (4, 64):
-        shared = tput("twa", 32, n_locks=n_locks, cs_work=50, ncs_max=100)
-        private = tput("twa", 32, n_locks=n_locks, cs_work=50, ncs_max=100,
-                       private_arrays=True)
+        spec = SweepSpec(locks="twa", threads=32, seeds=1, cs_work=50,
+                         ncs_max=100, private_arrays=(False, True),
+                         n_locks=n_locks, horizon=H)
+        res = run_sweep(spec)
+        shared = next(r["throughput"] for r in res if not r["private_arrays"])
+        private = next(r["throughput"] for r in res if r["private_arrays"])
         assert shared >= 0.85 * private, (n_locks, shared, private)
 
 
 def test_twa_staged_appendix_ordering():
     """Appendix 6: TWA-Staged scales like TWA (array-free unlock) but lags
     slightly behind it — two threads spin on grant instead of one."""
-    from repro.sim.workloads import median_throughput
-    t64 = {k: median_throughput(k, 64, runs=2)
-           for k in ("ticket", "twa", "twa-staged")}
+    spec = SweepSpec(locks=("ticket", "twa", "twa-staged"), threads=64,
+                     seeds=(1, 2))
+    res = run_sweep(spec)
+    t64 = {lock: float(np.median([r["throughput"] for r in res
+                                  if r["lock"] == lock]))
+           for lock in ("ticket", "twa", "twa-staged")}
     assert t64["twa-staged"] > 1.5 * t64["ticket"]   # scales, unlike ticket
     assert t64["twa-staged"] <= 1.1 * t64["twa"]     # but does not beat TWA

@@ -1,0 +1,123 @@
+"""Batched-sweep engine validation: run_sweep must be bit-equivalent to
+sequential run_sim, shape padding must be invisible, and an entire sweep
+must cost a single engine compilation."""
+
+import numpy as np
+import pytest
+
+from repro.sim import (SweepSpec, pad_program, pad_threads, run_contention,
+                       run_sweep)
+from repro.sim.engine import engine_cache_info, run_sim
+from repro.sim.programs import (INIT_MEM_GEN, Layout, build_mutexbench,
+                                init_state)
+
+H = 120_000
+
+
+def _run_sim_cell(lock, n_threads, *, seed, horizon=H, n_locks=1,
+                  private_arrays=False, cs_work=4, ncs_max=200):
+    layout = Layout(n_threads=n_threads, n_locks=n_locks,
+                    private_arrays=private_arrays)
+    prog = build_mutexbench(lock, layout, cs_work=cs_work, ncs_max=ncs_max)
+    pc, regs = init_state(layout)
+    gen_mem = INIT_MEM_GEN.get(lock)
+    return run_sim(prog, n_threads=n_threads, mem_words=layout.mem_words,
+                   n_locks=n_locks, init_pc=pc, init_regs=regs,
+                   wa_base=layout.wa_base, wa_size=layout.wa_size,
+                   horizon=horizon, seed=seed,
+                   init_mem=gen_mem(layout) if gen_mem else None)
+
+
+def test_sweep_matches_sequential_run_sim():
+    """Every cell of a padded, vmapped sweep must match an unpadded
+    sequential run_sim bit for bit — stats, per-thread counts, and memory."""
+    spec = SweepSpec(locks=("ticket", "twa", "anderson"), threads=(2, 5),
+                     seeds=(1, 2), horizon=H)
+    for r in run_sweep(spec):
+        ref = _run_sim_cell(r["lock"], r["n_threads"], seed=r["seed"])
+        assert np.array_equal(r["acquisitions"], ref["acquisitions"]), \
+            (r["lock"], r["n_threads"], r["seed"])
+        assert r["events"] == ref["events"]
+        assert r["handover_sum"] == ref["handover_sum"]
+        assert np.array_equal(r["mem"], ref["mem"])
+        assert r["throughput"] == ref["throughput"]
+
+
+def test_thread_padding_is_invisible():
+    """Masked inactive threads must not perturb the active ones."""
+    layout = Layout(n_threads=4, n_locks=1)
+    prog = build_mutexbench("twa", layout)
+    pc, regs = init_state(layout)
+    ref = run_sim(prog, n_threads=4, mem_words=layout.mem_words, n_locks=1,
+                  init_pc=pc, init_regs=regs, wa_base=layout.wa_base,
+                  wa_size=layout.wa_size, horizon=H, seed=3)
+    pc9, regs9 = pad_threads(pc, regs, 9)
+    padded = run_sim(prog, n_threads=9, mem_words=layout.mem_words, n_locks=1,
+                     init_pc=pc9, init_regs=regs9, wa_base=layout.wa_base,
+                     wa_size=layout.wa_size, horizon=H, seed=3, n_active=4)
+    assert np.array_equal(ref["acquisitions"], padded["acquisitions"][:4])
+    assert (padded["acquisitions"][4:] == 0).all()
+    assert ref["events"] == padded["events"]
+
+
+def test_sweep_single_compile_across_thread_counts():
+    """A sweep over several thread counts (and locks and seeds) must hit
+    exactly one _build_engine cache entry; re-running with different data
+    (new seeds) must add none."""
+    before = engine_cache_info()
+    spec = SweepSpec(locks=("ticket", "mcs"), threads=(3, 6, 7), seeds=1,
+                     horizon=60_000)
+    run_sweep(spec)
+    after = engine_cache_info()
+    assert after.currsize - before.currsize == 1
+    assert after.misses - before.misses == 1
+    run_sweep(SweepSpec(locks=("ticket", "mcs"), threads=(3, 6, 7), seeds=9,
+                        horizon=60_000))
+    again = engine_cache_info()
+    assert again.currsize == after.currsize
+    assert again.misses == after.misses
+
+
+def test_sweep_modes_bitwise_equal():
+    """The lane-parallel (vmap) and sequential (map) sweep drivers must
+    produce identical results."""
+    spec = SweepSpec(locks=("ticket", "twa"), threads=(2, 4), seeds=1,
+                     horizon=60_000)
+    res_map = run_sweep(spec, mode="map")
+    res_vmap = run_sweep(spec, mode="vmap")
+    for a, b in zip(res_map, res_vmap):
+        assert np.array_equal(a["acquisitions"], b["acquisitions"])
+        assert a["events"] == b["events"]
+        assert np.array_equal(a["mem"], b["mem"])
+
+
+def test_sweep_cells_cartesian_order():
+    spec = SweepSpec(locks=("a", "b"), threads=(1, 2), seeds=(7,),
+                     cs_work=(4, 8))
+    cells = spec.cells()
+    assert len(cells) == 8
+    assert [c.lock for c in cells[:4]] == ["a"] * 4
+    assert [(c.n_threads, c.cs_work) for c in cells[:4]] == \
+        [(1, 4), (1, 8), (2, 4), (2, 8)]
+
+
+def test_pad_program_idempotent_and_bounded():
+    layout = Layout(n_threads=2, n_locks=1)
+    prog = build_mutexbench("ticket", layout)
+    padded = pad_program(prog)
+    assert padded.shape == (256, 5)
+    assert np.array_equal(pad_program(padded), padded)
+    with pytest.raises(AssertionError):
+        pad_program(padded, 128)
+
+
+def test_anderson_requires_private_arrays_for_multilock():
+    layout = Layout(n_threads=4, n_locks=2)
+    with pytest.raises(ValueError):
+        build_mutexbench("anderson", layout)
+    # per-lock (private) arrays are safe: both locks stay FIFO-fair
+    res = run_contention("anderson", 8, n_locks=2, private_arrays=True,
+                         horizon=H)
+    acq = res["acquisitions"]
+    assert acq.min() > 0
+    assert acq.min() >= 0.8 * acq.max(), acq
