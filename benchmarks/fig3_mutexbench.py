@@ -4,20 +4,22 @@ CS = 4 PRNG steps, NCS uniform in [0,200) steps (paper §4.2), on the lockVM.
 Claims validated (tests/test_sim_paper_claims.py):
   * ticket best at low T, collapses at high T;
   * TWA ≈ ticket at low T, ≥ MCS at high T.
-Also runs the appendix variants (tkt-dual, twa-id, twa-staged, partitioned)
-and the Anderson array-lock baseline.  The whole figure — every lock ×
-thread count × seed — is ONE SweepSpec and one compiled engine call.
+Also runs the appendix variants (tkt-dual, twa-id, twa-staged, partitioned),
+the queue-lock baselines (anderson, clh, hemlock — Fissile Locks), and the
+waiting-array counting semaphore (twa-sem, permits=4).  The whole figure —
+every registered lock × thread count × seed — is ONE SweepSpec and one
+compiled engine call.
 """
 
 from __future__ import annotations
 
+from repro.sim import SIM_LOCKS
 from repro.sim.workloads import SweepSpec, sweep_curves
 
 from .common import emit
 
 THREADS = (1, 2, 4, 8, 16, 32, 64)
-LOCKS = ("ticket", "twa", "mcs", "tkt-dual", "twa-id", "twa-staged",
-         "partitioned", "anderson")
+LOCKS = tuple(SIM_LOCKS)
 
 
 def run(locks=LOCKS, threads=THREADS, runs: int = 3) -> dict:

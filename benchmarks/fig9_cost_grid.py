@@ -1,0 +1,70 @@
+"""Figure 9 (new) — coherence-cost sensitivity grid (C_INV x C_XFER).
+
+The paper's causal story (§2, Fig 1) is that ticket locks collapse because a
+release store pays the *invalidation diameter*: C_INV per camped sharer.
+This suite quantifies that argument by sweeping the cost model itself: at
+C_INV = 0 the diameter is free and ticket's collapse must vanish; as C_INV
+grows, TWA's advantage (bounded spinner count) must widen monotonically.
+C_XFER (dirty-line transfer) scales every handover equally, so it shifts
+absolute throughput but barely moves the TWA/ticket ratio — separating the
+two effects is the point of the grid.
+
+The whole grid — locks x C_INV x C_XFER x seeds — is one SweepSpec on the
+``costs`` axis and therefore ONE compiled engine call.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+from repro.sim import DEFAULT_COSTS, SweepSpec, run_sweep
+
+from .common import emit
+
+LOCKS = ("ticket", "twa", "mcs")
+C_INVS = (0, 6, 12, 24, 48)
+C_XFERS = (30, 90, 180)
+N_THREADS = 32
+SEEDS = (1, 2, 3)
+HORIZON = 500_000
+
+SMOKE_C_INVS = (0, 24)
+SMOKE_C_XFERS = (90,)
+SMOKE_SEEDS = (1,)
+SMOKE_HORIZON = 150_000
+
+
+def run(smoke: bool = False) -> dict:
+    c_invs = SMOKE_C_INVS if smoke else C_INVS
+    c_xfers = SMOKE_C_XFERS if smoke else C_XFERS
+    seeds = SMOKE_SEEDS if smoke else SEEDS
+    grid = tuple(replace(DEFAULT_COSTS, C_INV=ci, C_XFER=cx)
+                 for ci in c_invs for cx in c_xfers)
+    spec = SweepSpec(locks=LOCKS, threads=N_THREADS, seeds=seeds, costs=grid,
+                     horizon=SMOKE_HORIZON if smoke else HORIZON)
+    results = run_sweep(spec)
+    tput: dict[tuple, float] = {}
+    for lock in LOCKS:
+        for co in grid:
+            vals = [r["throughput"] for r in results
+                    if r["lock"] == lock and r["costs"] == co]
+            tput[lock, co.C_INV, co.C_XFER] = float(np.median(vals))
+            emit(f"fig9/{lock}/cinv={co.C_INV}/cxfer={co.C_XFER}",
+                 f"{tput[lock, co.C_INV, co.C_XFER]:.6f}", "acq_per_cycle")
+    ratios = {}
+    for cx in c_xfers:
+        for ci in c_invs:
+            ratio = tput["twa", ci, cx] / tput["ticket", ci, cx]
+            ratios[ci, cx] = ratio
+            emit(f"fig9/twa_over_ticket/cinv={ci}/cxfer={cx}",
+                 f"{ratio:.3f}", "paper: grows with C_INV")
+        emit(f"fig9/ratio_span/cxfer={cx}",
+             f"{ratios[c_invs[0], cx]:.3f}->{ratios[c_invs[-1], cx]:.3f}",
+             "invalidation-diameter sensitivity")
+    return {"throughput": tput, "ratios": ratios}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,12 +1,16 @@
 """Benchmark driver — one module per paper table/figure + framework-level
 benchmarks.  Prints ``name,value,derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig3,table1]
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,table1] [--smoke]
+
+``--smoke`` asks each suite that supports it (fig8, fig9) for a reduced grid
+— CI runs these per-PR and uploads the CSV as a workflow artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import time
 
 from .common import emit, header
@@ -19,6 +23,8 @@ SUITES = [
     ("fig5", "benchmarks.fig5_throw"),
     ("fig6", "benchmarks.fig6_rrc"),
     ("fig7", "benchmarks.fig7_stress_latency"),
+    ("fig8", "benchmarks.fig8_collisions"),
+    ("fig9", "benchmarks.fig9_cost_grid"),
     ("fig11", "benchmarks.fig11_locktorture"),
     ("threads", "benchmarks.threads_microbench"),
     ("admission", "benchmarks.framework_admission"),
@@ -29,6 +35,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated suite prefixes to run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grids for suites that support it")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
 
@@ -41,7 +49,10 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(module, fromlist=["run"])
-            mod.run()
+            kw = {}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kw["smoke"] = True
+            mod.run(**kw)
             emit(f"{name}/_elapsed_s", f"{time.time() - t0:.1f}", "ok")
         except Exception as e:  # keep the suite going; report at the end
             failures.append((name, repr(e)))

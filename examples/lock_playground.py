@@ -1,6 +1,8 @@
 """Lock playground: every algorithm, side by side.
 
-* lockVM throughput + handover latency at several thread counts,
+* lockVM throughput + handover latency at several thread counts (now
+  including clh, hemlock, and the twa-sem counting semaphore),
+* the semaphore's permit scaling and the waiting-array collision meter,
 * host-thread correctness + FIFO check,
 * the distributed variants' hot-key telemetry.
 
@@ -11,8 +13,9 @@ import threading
 
 from repro.core import (DistributedTWALock, DistributedTicketLock,
                         InMemoryKVStore, LOCK_CLASSES, make_lock)
+from repro.sim import Layout, read_collision_counters
 from repro.sim.programs import SIM_LOCKS
-from repro.sim.workloads import SweepSpec, run_sweep
+from repro.sim.workloads import SweepSpec, run_contention, run_sweep
 
 THREADS = (2, 16, 64)
 
@@ -28,6 +31,21 @@ for lock in SIM_LOCKS:
         r = results[lock, t]
         cells.append(f"{r['throughput']:.5f} {r['avg_handover']:6.0f}")
     print(f"{lock:>12} | " + " | ".join(cells))
+
+print("\n== twa-sem: counting-semaphore permit scaling (T=32) ==")
+for permits in (1, 2, 4, 8):
+    r = run_contention("twa-sem", 32, sem_permits=permits, horizon=400_000)
+    print(f"  permits={permits}: tput={r['throughput']:.5f} acq/cycle")
+
+print("\n== waiting-array collisions (twa, T=32, 4 locks, paper §3) ==")
+for wa_size in (16, 128, 2048):
+    r = run_contention("twa", 32, n_locks=4, wa_size=wa_size,
+                       count_collisions=True, horizon=400_000)
+    wakes, futile = read_collision_counters(
+        r["mem"], Layout(n_threads=32, n_locks=4, wa_size=wa_size))
+    rate = futile.sum() / max(wakes.sum(), 1)
+    print(f"  wa_size={wa_size:>4}: collision rate={rate:.3f} "
+          f"({futile.sum()} futile / {wakes.sum()} wakeups)")
 
 print("\n== host threads: correctness under contention ==")
 for kind in sorted(LOCK_CLASSES):

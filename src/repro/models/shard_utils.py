@@ -55,18 +55,46 @@ def act_seq_axes(axes):
         _SEQ_AXES.reset(token)
 
 
+def ambient_mesh():
+    """The ambient mesh (abstract or physical), or None when unset.
+
+    ``jax.sharding.get_abstract_mesh`` only exists from jax 0.5; on the 0.4.x
+    line the internal accessor exists but returns a bare ``()`` sentinel when
+    no abstract mesh is active.  Accept either, then fall back to the
+    thread-local physical mesh (``with mesh:``) so both mesh-entry styles
+    work across the supported jax range (>= 0.4.30).
+    """
+    try:
+        from jax._src import mesh as _mesh_internal
+    except ImportError:
+        _mesh_internal = None
+    get = getattr(jax.sharding, "get_abstract_mesh", None) \
+        or getattr(_mesh_internal, "get_abstract_mesh", None)
+    mesh = get() if get is not None else None
+    if getattr(mesh, "empty", True):  # None, the () sentinel, or truly empty
+        mesh = None
+    if mesh is None:
+        try:
+            physical = _mesh_internal.thread_resources.env.physical_mesh
+            if physical is not None and not physical.empty:
+                mesh = physical
+        except AttributeError:
+            pass
+    return mesh
+
+
 def mesh_axis_size(name: str) -> int:
     """Size of a mesh axis in the ambient mesh (1 if absent / no mesh)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = ambient_mesh()
+    if mesh is None:
         return 1
     return mesh.shape.get(name, 1)
 
 
 def constrain(x, *axes):
     """constrain(x, 'batch', None, 'model') — logical per-dim annotation."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = ambient_mesh()
+    if mesh is None:
         return x
     entries = []
     used: set = set()

@@ -2,10 +2,11 @@
 
 from .costs import Costs, DEFAULT_COSTS
 from .engine import run_sim
-from .programs import (ACQUIRE_GEN, INIT_MEM_GEN, Layout, PROG_LEN,
-                       RELEASE_GEN, SIM_LOCKS, build_invalidation_diameter,
-                       build_mutexbench, init_state, pad_mem, pad_program,
-                       pad_threads)
+from .programs import (ACQUIRE_GEN, INIT_MEM_GEN, LT_THRESHOLD, Layout,
+                       PROG_LEN, RELEASE_GEN, SIM_LOCKS,
+                       build_invalidation_diameter, build_mutexbench,
+                       build_occupancy_probe, init_state, pad_mem,
+                       pad_program, pad_threads, read_collision_counters)
 from .workloads import (SweepCell, SweepSpec, fig1_invalidation_diameter,
                         fig2_interlock_interference, median_throughput,
                         mutexbench_curve, run_contention, run_sweep,
@@ -13,7 +14,8 @@ from .workloads import (SweepCell, SweepSpec, fig1_invalidation_diameter,
 
 __all__ = [
     "Costs", "DEFAULT_COSTS", "run_sim", "Layout", "SIM_LOCKS", "PROG_LEN",
-    "build_mutexbench", "build_invalidation_diameter", "init_state",
+    "LT_THRESHOLD", "build_mutexbench", "build_invalidation_diameter",
+    "build_occupancy_probe", "read_collision_counters", "init_state",
     "pad_program", "pad_threads", "pad_mem",
     "ACQUIRE_GEN", "RELEASE_GEN", "INIT_MEM_GEN",
     "SweepSpec", "SweepCell", "run_sweep", "sweep_curves",

@@ -328,6 +328,10 @@ def _step(c: SimConsts, s: SimState) -> SimState:
         addr = rb + imm
         return _spin(mem[addr] != cc, addr)
 
+    def h_spin_ge():
+        addr = rb + imm
+        return _spin(mem[addr] >= ra, addr)
+
     def h_acq():
         lidx = ra
         rt = rel_time[lidx]
@@ -392,6 +396,7 @@ def _step(c: SimConsts, s: SimState) -> SimState:
     handlers[isa.ACQ] = h_acq
     handlers[isa.REL] = h_rel
     handlers[isa.HALT] = h_halt
+    handlers[isa.SPIN_GE] = h_spin_ge
     handlers.append(h_commit)   # pseudo-opcode isa.N_OPS
     handlers.append(h_noevent)  # pseudo-opcode isa.N_OPS + 1
 

@@ -48,8 +48,9 @@ SPIN_NEI = 30 # proceed when mem[regs[b]+imm]!=c
 ACQ = 31      # lock acquired; a=lockidx reg, c=1 if this acquisition waited
 REL = 32      # about to hand over; b=lockidx reg (timestamps handover)
 HALT = 33
+SPIN_GE = 34  # proceed when mem[regs[b]+imm] >= regs[a] (semaphore frontier)
 
-N_OPS = 34
+N_OPS = 35
 
 # --- registers ---------------------------------------------------------------
 R_TID, R_NODE, R_LOCK, R_LIDX = 0, 1, 2, 3
@@ -73,6 +74,14 @@ LOCK_STRIDE = 64 + 16 * WORDS_PER_SECTOR  # 320 words = 20 sectors
 MCS_FLAG = 0         # queue-node: flag sector ...
 MCS_NEXT = 16        # ... next-pointer sector
 MCS_NODE_STRIDE = 32
+
+# The per-thread node sector doubles as the queue cell for MCS/CLH/Hemlock
+# (word 0 = flag / CLH "locked" / Hemlock grant) and, for the TWA family under
+# ``Layout.count_collisions``, as private wakeup counters (the TWA programs
+# never touch their node otherwise):
+CC_WAKES = 0         # long-term wakeups observed (slot changed under me)
+CC_FUTILE = 1        # ... that left me still > threshold from the grant
+#                      (a colliding notify meant for another ticket, paper §3)
 
 
 class Asm:

@@ -14,15 +14,15 @@ from dataclasses import dataclass
 import numpy as np
 
 from .isa import (ACQ, ADDI, ANDI, Asm, BEQ, BEQI, BGTI, BLEI, BNEI, CASZ,
-                  FADD, HALT, HASH, HASHP, JMP, LOAD, MCS_FLAG, MCS_NEXT,
-                  MCS_NODE_STRIDE, LOCK_STRIDE, MOV, MOVI, MULI, N_REGS,
-                  OFF_GRANT, OFF_LGRANT, OFF_PGRANTS, OFF_TAIL, OFF_TICKET,
-                  PRNG, REL, R_AT, R_DX, R_G, R_K, R_LIDX, R_LOCK, R_NODE,
-                  R_NX, R_T1, R_T2, R_TID, R_TX, R_U, R_V, R_W, R_Z, SPIN_EQ,
-                  SPIN_EQI, SPIN_NE, SPIN_NEI, STORE, STOREI, SUB, SWAP,
-                  WORDS_PER_SECTOR, WORKI, WORKR)
+                  CC_FUTILE, CC_WAKES, FADD, HALT, HASH, HASHP, JMP, LOAD,
+                  MCS_FLAG, MCS_NEXT, MCS_NODE_STRIDE, LOCK_STRIDE, MOV, MOVI,
+                  MULI, N_REGS, OFF_GRANT, OFF_LGRANT, OFF_PGRANTS, OFF_TAIL,
+                  OFF_TICKET, PRNG, REL, R_AT, R_DX, R_G, R_K, R_LIDX, R_LOCK,
+                  R_NODE, R_NX, R_T1, R_T2, R_TID, R_TX, R_U, R_V, R_W, R_Z,
+                  SPIN_EQ, SPIN_EQI, SPIN_GE, SPIN_NE, SPIN_NEI, STORE,
+                  STOREI, SUB, SWAP, WORDS_PER_SECTOR, WORKI, WORKR)
 
-LT_THRESHOLD = 1  # the paper's LongTermThreshold
+LT_THRESHOLD = 1  # the paper's LongTermThreshold (default; Layout overrides)
 
 PROG_LEN = 256  # canonical padded program length (one engine shape for all)
 
@@ -33,6 +33,9 @@ class Layout:
     n_locks: int
     wa_size: int = 4096
     private_arrays: bool = False  # Fig-2 idealized per-lock arrays
+    long_term_threshold: int = LT_THRESHOLD  # TWA-family waiting split point
+    sem_permits: int = 4          # twa-sem counting-semaphore capacity
+    count_collisions: bool = False  # TWA family: tally wakeups in node words
 
     @property
     def node_base(self) -> int:
@@ -122,20 +125,44 @@ def gen_ticket_release(asm: Asm, tag: str) -> None:
     asm.emit(STORE, R_LOCK, R_K, 0, OFF_GRANT)  # non-atomic increment
 
 
+def _emit_wakeup_tally(asm: Asm, tag: str, thr: int, frontier: int) -> None:
+    """Collision instrumentation for a TWA-family long-term loop.
+
+    Emitted right after the loop's SPIN, i.e. executed once per wakeup.  Two
+    counters live in the thread's OWN node sector (never shared, so the
+    stores cost C_STORE_OWNED and wake nobody): total wakeups, and futile
+    wakeups — the slot changed but the grant is still more than ``thr`` past
+    ``frontier``, so the notify was a hash collision meant for another ticket
+    (paper §3).  A legitimate wakeup short-circuits to the ``_st`` stage.
+    """
+    asm.emit(LOAD, R_V, R_NODE, 0, CC_WAKES)
+    asm.emit(ADDI, R_V, R_V, 0, 1)
+    asm.emit(STORE, R_NODE, R_V, 0, CC_WAKES)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BLEI, R_DX, 0, frontier + thr, f"{tag}_st")
+    asm.emit(LOAD, R_V, R_NODE, 0, CC_FUTILE)
+    asm.emit(ADDI, R_V, R_V, 0, 1)
+    asm.emit(STORE, R_NODE, R_V, 0, CC_FUTILE)
+
+
 def gen_twa_acquire(asm: Asm, tag: str, layout: Layout) -> None:
+    thr = layout.long_term_threshold
     asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
     asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
     asm.emit(SUB, R_DX, R_TX, R_G)
     asm.emit(BEQI, R_DX, 0, 0, f"{tag}_fast")
-    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    asm.emit(BLEI, R_DX, 0, thr, f"{tag}_st")
     # long-term waiting via the waiting array
     asm.emit(_hash_op(layout), R_AT, R_TX, R_LIDX if layout.private_arrays else R_LOCK)
     asm.label(f"{tag}_lt")
     asm.emit(LOAD, R_U, R_AT, 0, 0)
     asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)   # recheck grant (races)
     asm.emit(SUB, R_DX, R_TX, R_G)
-    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    asm.emit(BLEI, R_DX, 0, thr, f"{tag}_st")
     asm.emit(SPIN_NE, R_U, R_AT, 0, 0)          # wait for slot to change
+    if layout.count_collisions:
+        _emit_wakeup_tally(asm, tag, thr, 0)
     asm.emit(JMP, 0, 0, 0, f"{tag}_lt")
     asm.label(f"{tag}_st")                       # short-term: classic spin
     asm.emit(SPIN_EQ, R_TX, R_LOCK, 0, OFF_GRANT)
@@ -150,7 +177,7 @@ def gen_twa_release(asm: Asm, tag: str, layout: Layout) -> None:
     asm.emit(ADDI, R_K, R_TX, 0, 1)
     asm.emit(REL, 0, R_LIDX, 0, 0)
     asm.emit(STORE, R_LOCK, R_K, 0, OFF_GRANT)  # handover store FIRST
-    asm.emit(ADDI, R_T1, R_K, 0, LT_THRESHOLD)
+    asm.emit(ADDI, R_T1, R_K, 0, layout.long_term_threshold)
     asm.emit(_hash_op(layout), R_AT, R_T1, R_LIDX if layout.private_arrays else R_LOCK)
     asm.emit(FADD, R_Z, R_AT, 1, 0)             # atomic notify (collisions)
 
@@ -182,16 +209,17 @@ def gen_mcs_release(asm: Asm, tag: str) -> None:
     asm.label(f"{tag}_done")
 
 
-def gen_tkt_dual_acquire(asm: Asm, tag: str) -> None:
+def gen_tkt_dual_acquire(asm: Asm, tag: str,
+                         thr: int = LT_THRESHOLD) -> None:
     asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
     asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
     asm.emit(SUB, R_DX, R_TX, R_G)
     asm.emit(BEQI, R_DX, 0, 0, f"{tag}_fast")
-    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    asm.emit(BLEI, R_DX, 0, thr, f"{tag}_st")
     asm.label(f"{tag}_lt")                       # long-term: spin on lgrant
     asm.emit(LOAD, R_U, R_LOCK, 0, OFF_LGRANT)
     asm.emit(SUB, R_DX, R_TX, R_U)
-    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    asm.emit(BLEI, R_DX, 0, thr, f"{tag}_st")
     asm.emit(SPIN_NE, R_U, R_LOCK, 0, OFF_LGRANT)
     asm.emit(JMP, 0, 0, 0, f"{tag}_lt")
     asm.label(f"{tag}_st")
@@ -211,16 +239,17 @@ def gen_tkt_dual_release(asm: Asm, tag: str) -> None:
 
 
 def gen_twa_id_acquire(asm: Asm, tag: str, layout: Layout) -> None:
+    thr = layout.long_term_threshold
     asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
     asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
     asm.emit(SUB, R_DX, R_TX, R_G)
     asm.emit(BEQI, R_DX, 0, 0, f"{tag}_fast")
-    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    asm.emit(BLEI, R_DX, 0, thr, f"{tag}_st")
     asm.emit(_hash_op(layout), R_AT, R_TX, R_LIDX if layout.private_arrays else R_LOCK)
     asm.emit(STORE, R_AT, R_T2, 0, 0)            # write identity (R_T2=tid+1)
     asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)    # recheck
     asm.emit(SUB, R_DX, R_TX, R_G)
-    asm.emit(BLEI, R_DX, 0, LT_THRESHOLD, f"{tag}_st")
+    asm.emit(BLEI, R_DX, 0, thr, f"{tag}_st")
     asm.emit(SPIN_NE, R_T2, R_AT, 0, 0)          # until slot != my identity
     asm.label(f"{tag}_st")
     asm.emit(SPIN_EQ, R_TX, R_LOCK, 0, OFF_GRANT)
@@ -235,7 +264,7 @@ def gen_twa_id_release(asm: Asm, tag: str, layout: Layout) -> None:
     asm.emit(ADDI, R_K, R_TX, 0, 1)
     asm.emit(REL, 0, R_LIDX, 0, 0)
     asm.emit(STORE, R_LOCK, R_K, 0, OFF_GRANT)
-    asm.emit(ADDI, R_T1, R_K, 0, LT_THRESHOLD)
+    asm.emit(ADDI, R_T1, R_K, 0, layout.long_term_threshold)
     asm.emit(_hash_op(layout), R_AT, R_T1, R_LIDX if layout.private_arrays else R_LOCK)
     asm.emit(STORE, R_AT, R_Z, 0, 0)             # plain store of 0 — no RMW
 
@@ -352,6 +381,132 @@ def gen_anderson_release(asm: Asm, tag: str, layout: Layout) -> None:
     asm.emit(STOREI, R_AT, 1, 0, 0)              # flags[next] = 1 (handover)
 
 
+def gen_clh_acquire(asm: Asm, tag: str) -> None:
+    """CLH queue lock: swap into the tail, spin on the PREDECESSOR's node.
+
+    Each thread owns one single-word cell (its node sector, word 0 = the CLH
+    "locked" flag).  Release recycles: the predecessor's now-free node becomes
+    this thread's node for the next acquisition — the classic CLH rotation —
+    so after k handovers a thread may well be spinning on a cell another
+    thread allocated.  The tail starts at a per-lock sentinel whose flag is 0
+    (see :func:`clh_init_mem`), which is what makes the first SWAP's
+    predecessor immediately grantable.
+    """
+    asm.emit(STOREI, R_NODE, 1, 0, MCS_FLAG)         # my.locked = 1
+    asm.emit(SWAP, R_T1, R_LOCK, R_NODE, OFF_TAIL)   # pred = XCHG(tail, me)
+    asm.emit(LOAD, R_U, R_T1, 0, MCS_FLAG)
+    asm.emit(BEQI, R_U, 0, 0, f"{tag}_fast")         # pred already unlocked
+    asm.emit(SPIN_EQI, 0, R_T1, 0, MCS_FLAG)         # spin on pred's cell
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_clh_release(asm: Asm, tag: str) -> None:
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STOREI, R_NODE, 0, 0, MCS_FLAG)         # handover: my.locked = 0
+    asm.emit(MOV, R_NODE, R_T1)                      # recycle pred's node
+
+
+def clh_init_mem(layout: Layout) -> np.ndarray:
+    """CLH tail starts at a per-lock sentinel node with locked == 0.
+
+    The sentinel borrows the lock region's OFF_PGRANTS sector (only the
+    partitioned lock uses those words, and a program is exactly one lock
+    algorithm), so no extra memory layout is needed.
+    """
+    mem = np.zeros(layout.mem_words, np.int32)
+    for lidx in range(layout.n_locks):
+        base = lidx * LOCK_STRIDE
+        mem[base + OFF_TAIL] = base + OFF_PGRANTS
+    return mem
+
+
+def gen_hemlock_acquire(asm: Asm, tag: str) -> None:
+    """Hemlock (Fissile Locks): one shared word per THREAD, none per lock
+    beyond the tail.
+
+    The queue is implicit: a waiter swaps into the tail and spins on its
+    predecessor's single ``grant`` word (node word 0) until it holds this
+    lock's signal value (lock address + 1 — distinct per lock and nonzero
+    for lock 0), then clears it back to 0 (the CTR acknowledgment) so the
+    predecessor's word is immediately reusable for its next acquisition.
+    """
+    asm.emit(SWAP, R_T1, R_LOCK, R_NODE, OFF_TAIL)   # pred = XCHG(tail, me)
+    asm.emit(BEQI, R_T1, 0, 0, f"{tag}_fast")        # tail was null: lock free
+    asm.emit(ADDI, R_V, R_LOCK, 0, 1)                # this lock's signal
+    asm.emit(SPIN_EQ, R_V, R_T1, 0, MCS_FLAG)        # wait pred.grant == sig
+    asm.emit(STOREI, R_T1, 0, 0, MCS_FLAG)           # acknowledge (clear)
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_hemlock_release(asm: Asm, tag: str) -> None:
+    asm.emit(CASZ, R_T1, R_LOCK, R_NODE, OFF_TAIL)   # tail==me ? tail = null
+    asm.emit(BEQ, R_T1, R_NODE, 0, f"{tag}_done")    # no successor: done
+    asm.emit(ADDI, R_V, R_LOCK, 0, 1)
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STORE, R_NODE, R_V, 0, MCS_FLAG)        # my.grant = signal
+    asm.emit(SPIN_EQI, 0, R_NODE, 0, MCS_FLAG)       # wait for the ack (== 0)
+    asm.label(f"{tag}_done")
+
+
+def gen_twa_sem_acquire(asm: Asm, tag: str, layout: Layout) -> None:
+    """Counting semaphore augmented with the waiting array (permits K > 1).
+
+    Ticket-based: OFF_TICKET counts draws, OFF_GRANT counts completed
+    releases (FADD — releases are concurrent, unlike a mutex), and ticket
+    ``tx`` may enter once ``tx - grant <= K-1``.  Exactly as in "Semaphores
+    Augmented with a Waiting Array", only waiters within ``threshold`` of
+    that eligibility frontier spin on the grant word (via SPIN_GE — the
+    frontier moves by more than 1 per release burst, so equality spinning
+    would deadlock); everyone further out parks on the hashed array slot.
+    """
+    K = layout.sem_permits
+    thr = layout.long_term_threshold
+    asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BLEI, R_DX, 0, K - 1, f"{tag}_fast")    # a permit is free now
+    asm.emit(BLEI, R_DX, 0, K - 1 + thr, f"{tag}_st")
+    asm.emit(_hash_op(layout), R_AT, R_TX, R_LIDX if layout.private_arrays else R_LOCK)
+    asm.label(f"{tag}_lt")
+    asm.emit(LOAD, R_U, R_AT, 0, 0)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)        # recheck grant (races)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BLEI, R_DX, 0, K - 1 + thr, f"{tag}_st")
+    asm.emit(SPIN_NE, R_U, R_AT, 0, 0)               # wait for slot to change
+    if layout.count_collisions:
+        _emit_wakeup_tally(asm, tag, thr, K - 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_lt")
+    asm.label(f"{tag}_st")                           # short-term: spin on grant
+    asm.emit(ADDI, R_T1, R_TX, 0, -(K - 1))          # enter when grant >= this
+    asm.emit(SPIN_GE, R_T1, R_LOCK, 0, OFF_GRANT)
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_twa_sem_release(asm: Asm, tag: str, layout: Layout) -> None:
+    K = layout.sem_permits
+    thr = layout.long_term_threshold
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(FADD, R_K, R_LOCK, 1, OFF_GRANT)        # releases++ (concurrent)
+    # after this release grant' = R_K + 1; the ticket newly crossing into
+    # short-term is grant' + (K-1) + thr — notify its hashed slot
+    asm.emit(ADDI, R_T1, R_K, 0, K + thr)
+    asm.emit(_hash_op(layout), R_AT, R_T1, R_LIDX if layout.private_arrays else R_LOCK)
+    asm.emit(FADD, R_Z, R_AT, 1, 0)                  # atomic notify
+    asm.emit(MOVI, R_Z, 0, 0, 0)                     # restore R_Z == 0
+
+
 def anderson_init_mem(layout: Layout) -> np.ndarray:
     """Initial memory for Anderson: the slot of ticket 0 pre-granted (the
     classic ``flags[0] = 1``), per lock."""
@@ -369,15 +524,20 @@ def anderson_init_mem(layout: Layout) -> np.ndarray:
 # Locks whose programs need nonzero initial memory contents.
 INIT_MEM_GEN = {
     "anderson": anderson_init_mem,
+    "clh": clh_init_mem,
 }
 
 
 ACQUIRE_GEN = {
     "anderson": gen_anderson_acquire,
+    "clh": lambda asm, tag, layout: gen_clh_acquire(asm, tag),
+    "hemlock": lambda asm, tag, layout: gen_hemlock_acquire(asm, tag),
     "ticket": lambda asm, tag, layout: gen_ticket_acquire(asm, tag),
     "twa": gen_twa_acquire,
+    "twa-sem": gen_twa_sem_acquire,
     "mcs": lambda asm, tag, layout: gen_mcs_acquire(asm, tag),
-    "tkt-dual": lambda asm, tag, layout: gen_tkt_dual_acquire(asm, tag),
+    "tkt-dual": lambda asm, tag, layout: gen_tkt_dual_acquire(
+        asm, tag, layout.long_term_threshold),
     "twa-id": gen_twa_id_acquire,
     "twa-staged": gen_twa_staged_acquire,
     "partitioned": lambda asm, tag, layout: gen_partitioned_acquire(asm, tag),
@@ -385,8 +545,11 @@ ACQUIRE_GEN = {
 
 RELEASE_GEN = {
     "anderson": gen_anderson_release,
+    "clh": lambda asm, tag, layout: gen_clh_release(asm, tag),
+    "hemlock": lambda asm, tag, layout: gen_hemlock_release(asm, tag),
     "ticket": lambda asm, tag, layout: gen_ticket_release(asm, tag),
     "twa": gen_twa_release,
+    "twa-sem": gen_twa_sem_release,
     "mcs": lambda asm, tag, layout: gen_mcs_release(asm, tag),
     "tkt-dual": lambda asm, tag, layout: gen_tkt_dual_release(asm, tag),
     "twa-id": gen_twa_id_release,
@@ -441,6 +604,59 @@ def build_mutexbench(lock: str, layout: Layout, *, cs_work: int = 4,
         asm.emit(WORKR, R_W, 0, 0, 0)
     asm.emit(JMP, 0, 0, 0, "top")
     return asm.finish()
+
+
+# Occupancy-probe words, parked in the lock's OFF_LGRANT sector (only
+# tkt-dual uses lgrant, so the probe supports every other lock).
+OCC_OFF = OFF_LGRANT
+VIOL_OFF = OFF_LGRANT + 1
+
+
+def build_occupancy_probe(lock: str, layout: Layout, *, cs_work: int = 2,
+                          ncs_max: int = 16) -> np.ndarray:
+    """MutexBench variant that PROVES the exclusion/permit cap inside the VM.
+
+    The critical section brackets an atomic occupancy counter: FADD +1 on
+    entry (flagging a violation if the cap was already saturated), FADD -1 on
+    exit.  A mutex must keep occupancy <= 1, twa-sem <= ``sem_permits``; the
+    final memory's VIOL word is 0 iff the cap never broke.
+    """
+    cap = layout.sem_permits if lock == "twa-sem" else 1
+    assert lock != "tkt-dual", "probe words live in the lgrant sector"
+    asm = Asm()
+    asm.label("top")
+    if layout.n_locks > 1:
+        asm.emit(PRNG, R_LIDX, 0, 0, layout.n_locks)
+        asm.emit(MULI, R_LOCK, R_LIDX, 0, LOCK_STRIDE)
+    ACQUIRE_GEN[lock](asm, "a", layout)
+    asm.emit(FADD, R_U, R_LOCK, 1, OCC_OFF)
+    asm.emit(BLEI, R_U, 0, cap - 1, "cap_ok")
+    asm.emit(STOREI, R_LOCK, 1, 0, VIOL_OFF)
+    asm.label("cap_ok")
+    if cs_work > 0:
+        asm.emit(WORKI, 0, 0, 0, cs_work * WORK_SCALE)
+    asm.emit(FADD, R_U, R_LOCK, -1, OCC_OFF)
+    RELEASE_GEN[lock](asm, "r", layout)
+    if ncs_max > 0:
+        asm.emit(PRNG, R_W, 0, 0, ncs_max)
+        asm.emit(MULI, R_W, R_W, 0, WORK_SCALE)
+        asm.emit(WORKR, R_W, 0, 0, 0)
+    asm.emit(JMP, 0, 0, 0, "top")
+    return asm.finish()
+
+
+def read_collision_counters(mem: np.ndarray,
+                            layout: Layout) -> tuple[np.ndarray, np.ndarray]:
+    """Per-thread (wakeups, futile-wakeups) from a ``count_collisions`` run.
+
+    The counters live in each thread's node sector (isa.CC_WAKES/CC_FUTILE);
+    the measured §3 collision rate is ``futile.sum() / wakeups.sum()``.
+    """
+    t = layout.n_threads
+    nodes = np.asarray(mem)[layout.node_base:
+                            layout.node_base + t * MCS_NODE_STRIDE]
+    nodes = nodes.reshape(t, MCS_NODE_STRIDE)
+    return nodes[:, CC_WAKES], nodes[:, CC_FUTILE]
 
 
 def build_invalidation_diameter() -> np.ndarray:

@@ -19,7 +19,7 @@ import numpy as np
 from . import engine
 from .costs import DEFAULT_COSTS, Costs
 from .engine import run_sim
-from .programs import (INIT_MEM_GEN, Layout, PROG_LEN,
+from .programs import (INIT_MEM_GEN, LT_THRESHOLD, Layout, PROG_LEN,
                        build_invalidation_diameter, build_mutexbench,
                        init_state, pad_mem, pad_program, pad_threads)
 
@@ -44,16 +44,18 @@ class SweepCell:
     cs_work: int
     private_arrays: bool
     costs: Costs
+    wa_size: int
+    long_term_threshold: int
 
 
 @dataclass(frozen=True)
 class SweepSpec:
     """Declarative description of a lockVM parameter sweep.
 
-    The first six fields are *axes*: each accepts a single value or a
+    The first eight fields are *axes*: each accepts a single value or a
     sequence, and :meth:`cells` yields their cartesian product in field
-    order (locks outermost, costs innermost).  The remaining fields are
-    scalar knobs shared by every cell.
+    order (locks outermost, long_term_threshold innermost).  The remaining
+    fields are scalar knobs shared by every cell.
     """
 
     locks: tuple | str = ("ticket", "twa", "mcs")
@@ -62,24 +64,33 @@ class SweepSpec:
     cs_work: tuple | int = 4
     private_arrays: tuple | bool = False
     costs: tuple | Costs = DEFAULT_COSTS
+    wa_size: tuple | int = 4096          # waiting-array slots (pow2, Fig 8)
+    long_term_threshold: tuple | int = LT_THRESHOLD  # TWA-family split point
     ncs_max: int = 200
     cs_rand: tuple | None = None
     n_locks: int = 1
     horizon: int = DEFAULT_HORIZON
     max_events: int = DEFAULT_MAX_EVENTS
-    wa_size: int = 4096
+    sem_permits: int = 4                 # twa-sem capacity
+    count_collisions: bool = False       # TWA family: tally wakeups (Fig 8)
 
     def cells(self) -> list[SweepCell]:
         return [SweepCell(lock=lk, n_threads=t, seed=s, cs_work=cw,
-                          private_arrays=pa, costs=co)
-                for lk, t, s, cw, pa, co in itertools.product(
+                          private_arrays=pa, costs=co, wa_size=ws,
+                          long_term_threshold=lt)
+                for lk, t, s, cw, pa, co, ws, lt in itertools.product(
                     _as_tuple(self.locks), _as_tuple(self.threads),
                     _as_tuple(self.seeds), _as_tuple(self.cs_work),
-                    _as_tuple(self.private_arrays), _as_tuple(self.costs))]
+                    _as_tuple(self.private_arrays), _as_tuple(self.costs),
+                    _as_tuple(self.wa_size),
+                    _as_tuple(self.long_term_threshold))]
 
     def layout_for(self, cell: SweepCell) -> Layout:
         return Layout(n_threads=cell.n_threads, n_locks=self.n_locks,
-                      wa_size=self.wa_size, private_arrays=cell.private_arrays)
+                      wa_size=cell.wa_size, private_arrays=cell.private_arrays,
+                      long_term_threshold=cell.long_term_threshold,
+                      sem_permits=self.sem_permits,
+                      count_collisions=self.count_collisions)
 
 
 def run_sweep(spec: SweepSpec, *, mode: str = "auto") -> list[dict]:
@@ -116,7 +127,8 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto") -> list[dict]:
         n_active=np.asarray([layout.n_threads for layout, *_ in built]),
         seeds=np.asarray([cell.seed for cell in cells], np.uint32),
         wa_base=np.asarray([layout.wa_base for layout, *_ in built]),
-        wa_size=spec.wa_size, horizon=spec.horizon,
+        wa_size=np.asarray([layout.wa_size for layout, *_ in built]),
+        horizon=spec.horizon,
         max_events=spec.max_events,
         costs=np.stack([cell.costs.to_array() for cell in cells]),
         init_mem=np.stack([pad_mem(init_mem, m_max)
@@ -130,7 +142,8 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto") -> list[dict]:
         res = {
             "lock": cell.lock, "n_threads": t, "seed": cell.seed,
             "cs_work": cell.cs_work, "private_arrays": cell.private_arrays,
-            "costs": cell.costs,
+            "costs": cell.costs, "wa_size": cell.wa_size,
+            "long_term_threshold": cell.long_term_threshold,
             "acquisitions": raw["acquisitions"][i, :t],
             "waited_acquisitions": raw["waited_acquisitions"][i, :t],
             "handover_sum": raw["handover_sum"][i],
@@ -157,6 +170,8 @@ def sweep_curves(spec: SweepSpec, value: str = "throughput") -> dict:
     assert len(_as_tuple(spec.cs_work)) == 1
     assert len(_as_tuple(spec.private_arrays)) == 1
     assert len(_as_tuple(spec.costs)) == 1
+    assert len(_as_tuple(spec.wa_size)) == 1
+    assert len(_as_tuple(spec.long_term_threshold)) == 1
     results = run_sweep(spec)
     by_cell = {(r["lock"], r["n_threads"], r["seed"]): r[value]
                for r in results}
@@ -171,12 +186,17 @@ def run_contention(lock: str, n_threads: int, *, cs_work: int = 4,
                    n_locks: int = 1, private_arrays: bool = False,
                    horizon: int = DEFAULT_HORIZON, seed: int = 1,
                    costs: Costs = DEFAULT_COSTS,
-                   max_events: int = DEFAULT_MAX_EVENTS) -> dict:
-    """One MutexBench-style cell: throughput + handover stats."""
+                   max_events: int = DEFAULT_MAX_EVENTS, **spec_kw) -> dict:
+    """One MutexBench-style cell: throughput + handover stats.
+
+    Extra keyword args (``wa_size``, ``long_term_threshold``, ``sem_permits``,
+    ``count_collisions``, ...) pass straight through to :class:`SweepSpec`.
+    """
     spec = SweepSpec(locks=lock, threads=n_threads, seeds=seed,
                      cs_work=cs_work, private_arrays=private_arrays,
                      costs=costs, ncs_max=ncs_max, cs_rand=cs_rand,
-                     n_locks=n_locks, horizon=horizon, max_events=max_events)
+                     n_locks=n_locks, horizon=horizon, max_events=max_events,
+                     **spec_kw)
     return run_sweep(spec)[0]
 
 

@@ -102,8 +102,9 @@ def build_train_step(cfg: ArchConfig, optimizer: AdamW,
 def _constrain_like_params(grads, cfg: ArchConfig, rules):
     """Pin each gradient leaf to the parameter sharding (trace-time no-op
     without an ambient mesh)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    from repro.models.shard_utils import ambient_mesh
+    mesh = ambient_mesh()
+    if mesh is None:
         return grads
     from repro.models.model import param_specs
     from repro.train.sharding import DEFAULT_RULES, spec_for_axes

@@ -1,0 +1,139 @@
+"""CLH, Hemlock, and the TWA counting semaphore on the lockVM.
+
+Covers the PR-2 acceptance invariants: the new locks must be full sweep
+citizens (vmap/map bit-identical, padded sweep identical to single-cell
+run_sim), must respect conservation (every acquire paired with one release,
+semaphore occupancy never above the permit cap, mutex occupancy never above
+1), and the new SweepSpec axes (wa_size, long_term_threshold) must reach the
+generated programs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.sim import (Layout, SIM_LOCKS, SweepSpec, build_occupancy_probe,
+                       init_state, read_collision_counters, run_contention,
+                       run_sweep)
+from repro.sim.engine import run_sim
+from repro.sim.isa import OFF_GRANT, OFF_TICKET
+from repro.sim.programs import INIT_MEM_GEN, OCC_OFF, VIOL_OFF
+
+H = 120_000
+NEW_LOCKS = ("clh", "hemlock", "twa-sem")
+
+
+def _run_sim_cell(lock, n_threads, *, seed, horizon=H, **layout_kw):
+    layout = Layout(n_threads=n_threads, n_locks=1, **layout_kw)
+    from repro.sim import build_mutexbench
+    prog = build_mutexbench(lock, layout)
+    pc, regs = init_state(layout)
+    gen_mem = INIT_MEM_GEN.get(lock)
+    return run_sim(prog, n_threads=n_threads, mem_words=layout.mem_words,
+                   n_locks=1, init_pc=pc, init_regs=regs,
+                   wa_base=layout.wa_base, wa_size=layout.wa_size,
+                   horizon=horizon, seed=seed,
+                   init_mem=gen_mem(layout) if gen_mem else None)
+
+
+def test_new_locks_registered():
+    assert set(NEW_LOCKS) <= set(SIM_LOCKS)
+
+
+def test_new_locks_sweep_matches_sequential_run_sim():
+    """Padded, batched sweep must equal the unpadded single-cell engine bit
+    for bit — per-thread counts, events, and final memory."""
+    spec = SweepSpec(locks=NEW_LOCKS, threads=(3, 8), seeds=(1, 2), horizon=H)
+    for r in run_sweep(spec):
+        ref = _run_sim_cell(r["lock"], r["n_threads"], seed=r["seed"])
+        assert np.array_equal(r["acquisitions"], ref["acquisitions"]), \
+            (r["lock"], r["n_threads"], r["seed"])
+        assert r["events"] == ref["events"]
+        assert np.array_equal(r["mem"], ref["mem"])
+
+
+def test_new_locks_modes_bitwise_equal():
+    """Lane-parallel (vmap) and sequential (map) drivers must agree exactly
+    for the new programs (SWAP/CASZ queues and SPIN_GE included)."""
+    spec = SweepSpec(locks=NEW_LOCKS, threads=(2, 6), seeds=1, horizon=60_000)
+    for a, b in zip(run_sweep(spec, mode="map"), run_sweep(spec, mode="vmap")):
+        assert np.array_equal(a["acquisitions"], b["acquisitions"])
+        assert a["events"] == b["events"]
+        assert np.array_equal(a["mem"], b["mem"])
+
+
+def test_new_locks_progress_and_fifo_fairness():
+    """CLH and Hemlock queues are FIFO: every thread makes progress and
+    per-thread counts stay balanced; the semaphore is ticket-FIFO too."""
+    spec = SweepSpec(locks=NEW_LOCKS, threads=16, seeds=1, horizon=H)
+    for r in run_sweep(spec):
+        acq = r["acquisitions"]
+        assert acq.min() > 0, r["lock"]
+        assert acq.min() >= 0.8 * acq.max(), (r["lock"], acq)
+
+
+@pytest.mark.parametrize("lock", ["clh", "hemlock", "twa-sem", "ticket",
+                                  "twa", "mcs"])
+def test_occupancy_cap_never_violated(lock):
+    """The probe program flags any instant where critical-section occupancy
+    exceeds the cap (1 for mutexes, sem_permits for twa-sem) — the flag must
+    stay clear, and occupancy must return to [0, cap] at the horizon."""
+    cap = 3 if lock == "twa-sem" else 1
+    layout = Layout(n_threads=12, n_locks=1, sem_permits=3)
+    prog = build_occupancy_probe(lock, layout)
+    pc, regs = init_state(layout)
+    gen_mem = INIT_MEM_GEN.get(lock)
+    res = run_sim(prog, n_threads=12, mem_words=layout.mem_words, n_locks=1,
+                  init_pc=pc, init_regs=regs, wa_base=layout.wa_base,
+                  wa_size=layout.wa_size, horizon=H,
+                  init_mem=gen_mem(layout) if gen_mem else None)
+    assert res["mem"][VIOL_OFF] == 0
+    assert 0 <= res["mem"][OCC_OFF] <= cap
+    assert res["acquisitions"].sum() > 0
+
+
+def test_semaphore_conservation_and_permit_scaling():
+    """Every acquisition drew a unique ticket, every release bumped the grant
+    exactly once, in-flight tickets never exceed the thread count — and more
+    permits must buy more throughput."""
+    results = {}
+    for permits in (1, 4):
+        r = run_contention("twa-sem", 24, sem_permits=permits, horizon=H)
+        ticket, grant = r["mem"][OFF_TICKET], r["mem"][OFF_GRANT]
+        acq = int(r["acquisitions"].sum())
+        assert 0 <= ticket - grant <= 24            # in-flight bounded
+        assert grant <= acq <= ticket               # release <= acquire <= draw
+        results[permits] = r["throughput"]
+    assert results[4] > 1.5 * results[1], results
+
+
+def test_wa_size_axis_reaches_the_program():
+    """Smaller waiting arrays must produce measurably more collisions (§3
+    birthday bound): the futile-wakeup rate at wa_size=16 must dominate
+    wa_size=2048, which must be near zero."""
+    spec = SweepSpec(locks="twa", threads=32, seeds=1, n_locks=4,
+                     wa_size=(16, 2048), count_collisions=True,
+                     horizon=150_000)
+    rates = {}
+    for r in run_sweep(spec):
+        layout = Layout(n_threads=32, n_locks=4, wa_size=r["wa_size"])
+        wakes, futile = read_collision_counters(r["mem"], layout)
+        assert wakes.sum() > 0
+        rates[r["wa_size"]] = futile.sum() / wakes.sum()
+    assert rates[16] > 0.05
+    assert rates[2048] < 0.5 * rates[16]
+
+
+def test_long_term_threshold_axis_reaches_the_program():
+    """A threshold above the thread count (queue depth can never exceed T)
+    makes the long-term path unreachable — zero waiting-array wakeups — while
+    the paper's threshold of 1 parks nearly every waiter there."""
+    spec = SweepSpec(locks="twa", threads=32, seeds=1,
+                     long_term_threshold=(1, 40), count_collisions=True,
+                     horizon=150_000)
+    wakes = {}
+    for r in run_sweep(spec):
+        layout = Layout(n_threads=32, n_locks=1)
+        w, _ = read_collision_counters(r["mem"], layout)
+        wakes[r["long_term_threshold"]] = int(w.sum())
+    assert wakes[40] == 0, wakes
+    assert wakes[1] > 100, wakes
