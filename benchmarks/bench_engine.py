@@ -1,0 +1,123 @@
+"""Engine-mode benchmark — map vs vmap vs sched on a deliberately skewed sweep.
+
+The batched engine offers three bit-identical sweep drivers; this suite
+measures the cost model that separates them.  The sweep is skewed on
+purpose: a few heavy cells (many threads, long horizon) next to many light
+ones, so lane-parallel ``vmap`` pays ``max(events) × B`` lane-steps (idle
+lanes still execute the self-guarding no-event step) while ``map`` and the
+work-stealing ``sched`` driver pay ~``sum(events)``.
+
+Rows: ``bench_engine/<mode>/wall_ms`` (median of ``repeats`` timed runs,
+compile excluded via a warmup call), ``bench_engine/sum_events`` /
+``max_events`` (the sweep's skew), and ``bench_engine/speedup/<a>_over_<b>``
+ratios.  The same numbers land in ``BENCH_engine.json`` — CI uploads it per
+run, so the engine-perf trajectory is inspectable per change — and the
+``sched_over_vmap`` speedup is asserted ≥ 1 (the scheduler must never lose
+to lane-parallel on its home turf; on CPU it should win ~2×+).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+
+from repro.sim import engine
+from repro.sim.workloads import pack_engine_cells
+
+from .common import emit
+
+# (lock, n_threads, horizon): two heavy cells amid many light ones
+SKEWED_CELLS = (
+    [("twa", 32, 600_000), ("ticket", 32, 600_000)]
+    + [(lk, t, 40_000)
+       for lk in ("ticket", "twa", "mcs") for t in (2, 4, 8)] * 2
+)
+SMOKE_CELLS = (
+    [("twa", 16, 300_000)]
+    + [(lk, t, 25_000) for lk in ("ticket", "twa") for t in (2, 4, 8)]
+    + [("mcs", 4, 25_000)] * 3
+)
+
+MODES = (("map", {}), ("vmap", {}), ("sched", {"lanes": 4, "chunk": 512}))
+
+
+def run(smoke: bool = False, repeats: int = 3,
+        json_path: str | None = None) -> dict:
+    cells = SMOKE_CELLS if smoke else SKEWED_CELLS
+    programs, kw = pack_engine_cells(cells, seeds=1)
+
+    walls: dict[str, float] = {}
+    reference = None
+    for mode, mode_kw in MODES:
+        out = engine.run_sweep(programs, mode=mode, **mode_kw, **kw)  # compile
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = engine.run_sweep(programs, mode=mode, **mode_kw, **kw)
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        walls[mode] = times[len(times) // 2]
+        emit(f"bench_engine/{mode}/wall_ms", f"{walls[mode] * 1e3:.1f}",
+             f"median_of_{repeats} " + " ".join(f"{k}={v}"
+                                                for k, v in mode_kw.items()))
+        if reference is None:
+            reference = out
+        else:  # the three drivers must agree bit for bit
+            for key in ("acquisitions", "events", "grant_value"):
+                assert np.array_equal(reference[key], out[key]), (mode, key)
+
+    events = reference["events"]
+    emit("bench_engine/sum_events", int(events.sum()),
+         f"B={len(cells)} lane_steps_paid_by_map_and_sched")
+    emit("bench_engine/max_events", int(events.max()),
+         f"x B = {int(events.max()) * len(cells)} lane_steps_paid_by_vmap")
+
+    speedups = {}
+    for a, b in (("sched", "vmap"), ("map", "vmap"), ("map", "sched")):
+        speedups[f"{a}_over_{b}"] = walls[b] / walls[a]
+        emit(f"bench_engine/speedup/{a}_over_{b}",
+             f"{speedups[f'{a}_over_{b}']:.2f}",
+             "wall_ratio (>1 means first is faster)")
+
+    point = {
+        "backend": jax.default_backend(),
+        "n_cells": len(cells),
+        "smoke": smoke,
+        "sum_events": int(events.sum()),
+        "max_events": int(events.max()),
+        "wall_ms": {m: round(w * 1e3, 1) for m, w in walls.items()},
+        "speedup": {k: round(v, 3) for k, v in speedups.items()},
+        "sched_params": dict(MODES[2][1]),
+    }
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(point, f, indent=1)
+    # The no-regression gate is CPU physics (idle vmap lanes still pay the
+    # scalar step); on accelerators vmap's lanes are genuinely parallel and
+    # sched ~= vmap + refill overhead, so there only the JSON records it.
+    if jax.default_backend() == "cpu":
+        assert speedups["sched_over_vmap"] >= 1.0, (
+            f"sched regressed below vmap on the skewed sweep: {point}")
+    return point
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep (CI-sized)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json", default="BENCH_engine.json",
+                    help="where to write the trajectory point")
+    args = ap.parse_args()
+    run(smoke=args.smoke, repeats=args.repeats, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,11 +12,21 @@ array outgrows the concurrent-waiter population.
 Grid: wa_size x long_term_threshold x threads over a small lock pool
 (cross-lock aliasing is what makes the slot map birthday-random rather than
 a pure modular wraparound).  One SweepSpec, one compiled engine call.
+
+Next to each measured rate the CSV carries the paper's closed-form birthday
+bound (:func:`birthday_bound`), and a per-cell derived-column assertion
+checks model ≈ measurement: the measured rate may never exceed the bound
+(beyond noise), and wherever the bound says collisions have decayed to ~0
+the measurement must agree.  The bound is conservative at small arrays
+because real tickets are *sequential*, not birthday-random — consecutive
+waiters occupy distinct slots — which is exactly the sense in which §3's
+"collisions are rare" argument is safe.
 """
 
 from __future__ import annotations
 
 from repro.sim import Layout, SweepSpec, read_collision_counters, run_sweep
+from repro.sim.isa import LOCK_STRIDE
 
 from .common import emit
 
@@ -31,6 +41,35 @@ SMOKE_THRESHOLDS = (1,)
 SMOKE_THREADS = (16,)
 SMOKE_HORIZON = 120_000
 
+# Per-cell model-vs-measurement tolerances: the bound may be beaten by a lot
+# (sequential tickets), exceeded only by noise; where the model says the
+# array has outgrown the waiters (rate ≤ DECAYED) the measurement must agree.
+BOUND_SLACK = 0.05
+DECAYED = 0.02
+
+
+def birthday_bound(n_threads: int, n_locks: int, threshold: int,
+                   wa_size: int) -> float:
+    """Closed-form §3 birthday bound on the futile-wakeup rate.
+
+    At full contention, every thread not holding a lock (one per lock) and
+    not short-term spinning (``threshold`` per lock) camps on a hashed
+    waiting-array slot.  Treating the other ``W - 1`` campers' slots as
+    uniform birthday draws, a notify drags ``lam = g * (W-1) / wa_size``
+    bystanders along with its target, i.e. a futile fraction
+    ``lam / (1 + lam)`` of all wakeups.  ``g`` corrects for lock-base
+    aliasing: ``LOCK_STRIDE``'s low bits are zero, so whenever several lock
+    bases coincide under the slot mask their populations share one slot
+    mapping and the colliding density multiplies accordingly.
+    """
+    campers = max(n_threads - n_locks * (1 + threshold), 0)
+    if campers <= 1:
+        return 0.0
+    distinct = len({(lock * LOCK_STRIDE) & (wa_size - 1)
+                    for lock in range(n_locks)})
+    lam = (n_locks / distinct) * (campers - 1) / wa_size
+    return lam / (1.0 + lam)
+
 
 def run(smoke: bool = False) -> dict:
     wa_sizes = SMOKE_WA_SIZES if smoke else WA_SIZES
@@ -41,6 +80,7 @@ def run(smoke: bool = False) -> dict:
                      n_locks=N_LOCKS, count_collisions=True,
                      horizon=SMOKE_HORIZON if smoke else HORIZON)
     rates: dict[tuple, float] = {}
+    violations: list[str] = []
     for r in run_sweep(spec):
         layout = Layout(n_threads=r["n_threads"], n_locks=N_LOCKS,
                         wa_size=r["wa_size"])
@@ -48,10 +88,18 @@ def run(smoke: bool = False) -> dict:
         rate = float(futile.sum()) / max(int(wakes.sum()), 1)
         key = (r["n_threads"], r["long_term_threshold"], r["wa_size"])
         rates[key] = rate
+        model = birthday_bound(r["n_threads"], N_LOCKS,
+                               r["long_term_threshold"], r["wa_size"])
+        ok = rate <= model + BOUND_SLACK and (
+            model > DECAYED or rate <= model + DECAYED)
         tag = f"fig8/twa/T={key[0]}/thr={key[1]}/wa={key[2]}"
         emit(tag, f"{rate:.4f}",
-             f"collision_rate wakeups={int(wakes.sum())}")
+             f"model={model:.4f} "
+             f"{'birthday_ok' if ok else 'birthday_VIOLATION'} "
+             f"wakeups={int(wakes.sum())}")
         emit(f"{tag}/tput", f"{r['throughput']:.6f}", "acq_per_cycle")
+        if not ok:
+            violations.append(f"{tag}: measured={rate:.4f} model={model:.4f}")
     # §3 birthday bound: the rate must decay as the array grows
     for t in threads:
         for thr in thresholds:
@@ -60,6 +108,8 @@ def run(smoke: bool = False) -> dict:
             emit(f"fig8/decay/T={t}/thr={thr}",
                  f"{small:.4f}->{big:.4f}",
                  "paper_s3: nonzero at small wa, ~0 at large")
+    assert not violations, "birthday model vs measurement: " + \
+        "; ".join(violations)
     return rates
 
 

@@ -28,6 +28,7 @@ SUITES = [
     ("fig11", "benchmarks.fig11_locktorture"),
     ("threads", "benchmarks.threads_microbench"),
     ("admission", "benchmarks.framework_admission"),
+    ("bench_engine", "benchmarks.bench_engine"),
 ]
 
 

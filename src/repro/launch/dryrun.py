@@ -173,12 +173,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             result["rules"]["__seq__"] = str(seq_ax)
 
     import contextlib
-    from repro.models.shard_utils import act_batch_axes, act_seq_axes
+    from repro.models.shard_utils import act_batch_axes, act_seq_axes, use_mesh
     ctx = act_batch_axes(batch_ax) if batch_ax else contextlib.nullcontext()
     ctx2 = act_seq_axes(seq_ax) if seq_ax else contextlib.nullcontext()
 
     t0 = time.time()
-    with jax.set_mesh(mesh), ctx, ctx2:
+    # use_mesh() shims the jax>=0.5-only set_mesh API down to 0.4.x
+    with use_mesh(mesh), ctx, ctx2:
         if cell.kind == "train":
             A = accum if accum is not None else ACCUM.get(arch, 1)
             opts = TrainOptions(accum_steps=A,

@@ -55,6 +55,25 @@ def act_seq_axes(axes):
         _SEQ_AXES.reset(token)
 
 
+def use_mesh(mesh):
+    """Context manager making ``mesh`` ambient, across the supported jax range.
+
+    Preference order: ``jax.sharding.use_mesh`` (the documented context
+    manager on the 0.5/0.6 line), then ``jax.set_mesh`` (its successor —
+    context-manager form from 0.6).  On 0.4.x neither exists, so fall back
+    to entering the ``Mesh`` itself (the thread-local physical mesh), which
+    :func:`ambient_mesh` — and therefore :func:`constrain` and jit
+    in_shardings — resolves identically.  Mirror of the ``ambient_mesh()``
+    read-side shim: every mesh *write* must route through here, never
+    ``jax.set_mesh`` directly.
+    """
+    setter = getattr(jax.sharding, "use_mesh", None) \
+        or getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh  # jax 0.4.x: Mesh is its own context manager
+
+
 def ambient_mesh():
     """The ambient mesh (abstract or physical), or None when unset.
 

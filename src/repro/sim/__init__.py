@@ -9,8 +9,8 @@ from .programs import (ACQUIRE_GEN, INIT_MEM_GEN, LT_THRESHOLD, Layout,
                        pad_program, pad_threads, read_collision_counters)
 from .workloads import (SweepCell, SweepSpec, fig1_invalidation_diameter,
                         fig2_interlock_interference, median_throughput,
-                        mutexbench_curve, run_contention, run_sweep,
-                        sweep_curves)
+                        mutexbench_curve, pack_engine_cells, run_contention,
+                        run_sweep, sweep_curves)
 
 __all__ = [
     "Costs", "DEFAULT_COSTS", "run_sim", "Layout", "SIM_LOCKS", "PROG_LEN",
@@ -19,6 +19,7 @@ __all__ = [
     "pad_program", "pad_threads", "pad_mem",
     "ACQUIRE_GEN", "RELEASE_GEN", "INIT_MEM_GEN",
     "SweepSpec", "SweepCell", "run_sweep", "sweep_curves",
+    "pack_engine_cells",
     "fig1_invalidation_diameter", "fig2_interlock_interference",
     "mutexbench_curve", "run_contention", "median_throughput",
 ]

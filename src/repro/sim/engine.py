@@ -18,26 +18,44 @@ line sharer; SPIN sleepers stay registered while parked — so every release
 store pays C_INV × (#threads camped on that line): ticket locks pay O(T),
 TWA pays O(LongTermThreshold). That asymmetry is the paper.
 
+Sharer bitsets: the per-line sharer set is a packed ``(n_lines,
+ceil(T/32)) uint32`` bitset, not a ``(n_lines, T)`` bool matrix.  Thread
+``t`` owns bit ``t & 31`` of word ``t >> 5``; ``store_cost``'s invalidation
+count is a popcount over the line's words, sharer registration ORs one bit
+into one word, and an exclusive grab (RMW / commit) rewrites the whole row
+to the actor's lone bit.  This shrinks the hot per-step state 32× — the
+paper's compact-waiting-state argument, applied to the simulator itself.
+
 Structure (batched-sweep refactor):
   * :func:`_step` — pure single-event transition ``(SimConsts, SimState) ->
-    SimState``.  The opcode switch computes only a compact :class:`Effects`
-    record (scalars plus one register row); the big-array updates (memory,
-    sharer matrix, pending stores, wakeups) are applied ONCE outside the
-    switch.  This matters under ``vmap``: a batched ``lax.switch`` executes
-    every branch and selects, so branches must not carry whole-state copies.
-    A store commit is dispatched through the same switch as pseudo-opcode
-    ``isa.N_OPS``.
+    SimState``.  Event selection is ONE fused argmin over the concatenated
+    ``[pending-commit times | thread times]`` vector (ties resolve to the
+    commit, matching the historical ``t_cm <= t_th`` rule).  The opcode
+    switch computes only a compact :class:`Effects` record (scalars plus one
+    register row); the big-array updates (memory, sharer bitsets, pending
+    stores, wakeups) are applied ONCE outside the switch.  This matters
+    under ``vmap``: a batched ``lax.switch`` executes every branch and
+    selects, so branches must not carry whole-state copies.  A store commit
+    is dispatched through the same switch as pseudo-opcode ``isa.N_OPS``.
   * :func:`_make_run` — wraps the step in a ``lax.while_loop`` driver plus
     stats extraction.
   * :func:`_build_engine` — lru-cached jit of the driver, keyed ONLY on array
-    shapes ``(n_threads, mem_words, n_locks, prog_len)``.  Everything else —
-    program contents, costs, waiting-array geometry, horizon — is a traced
-    input, so sweeping any of those axes reuses one executable.
-  * :func:`run_sweep` — ``jax.vmap`` of the driver over a leading batch axis:
-    an entire figure (lock × threads × seed × ...) is ONE compiled call.
-    Cells with fewer threads than the batch maximum mask the excess threads
-    inactive (``next_time = INF`` forever), which leaves their per-event
-    behaviour bit-identical to an unpadded run.
+    shapes ``(n_threads, mem_words, n_locks, prog_len)`` (plus the lane
+    geometry for the scheduler).  Everything else — program contents, costs,
+    waiting-array geometry, horizon — is a traced input, so sweeping any of
+    those axes reuses one executable.
+  * :func:`run_sweep` — batched sweep in ONE compiled call, three drivers:
+    ``mode="vmap"`` (lane-parallel, every cell is a lane), ``mode="map"``
+    (sequential cells), and ``mode="sched"`` — a chunked work-stealing lane
+    scheduler (:func:`_make_run_sched`): ``lanes`` lanes step in fixed-size
+    chunks inside an outer while loop, and a lane whose cell finished is
+    refilled from the queue of not-yet-started cells.  A skewed sweep then
+    costs ~``sum(events)`` lane-steps instead of vmap's ``max(events) × B``,
+    while per-cell results stay bit-identical to ``mode="map"`` (each cell
+    still executes its private event sequence — only lane placement
+    changes).  Cells with fewer threads than the batch maximum mask the
+    excess threads inactive (``next_time = INF`` forever), which leaves
+    their per-event behaviour bit-identical to an unpadded run.
 """
 
 from __future__ import annotations
@@ -55,6 +73,11 @@ from .costs import (DEFAULT_COSTS, I_ATOMIC, I_HIT, I_INV, I_LOCAL, I_MISS,
 from .programs import PROG_LEN, pad_program
 
 INF = np.int32(1 << 29)
+
+
+def bitset_words(n_threads: int) -> int:
+    """Words in a packed per-line sharer bitset (32 threads per uint32)."""
+    return (n_threads + 31) // 32
 
 
 class SimConsts(NamedTuple):
@@ -77,7 +100,7 @@ class SimState(NamedTuple):
     regs: jax.Array        # (T, N_REGS)
     prng: jax.Array        # (T,) uint32 LCG state
     mem: jax.Array         # (mem_words,)
-    sharers: jax.Array     # (n_lines, T) bool — thread caches the line
+    sharers: jax.Array     # (n_lines, ceil(T/32)) uint32 bitset — cached lines
     dirty: jax.Array       # (n_lines,) owning thread or -1
     pend_addr: jax.Array   # (T,) pending-store address or -1
     pend_val: jax.Array    # (T,)
@@ -142,34 +165,42 @@ def _step(c: SimConsts, s: SimState) -> SimState:
      pend_addr, pend_val, pend_time, spin_addr,
      acq, waited_acq, rel_time, hand_sum, hand_cnt, events) = s
 
-    t = jnp.argmin(next_time)
-    t_th = next_time[t]
+    # One fused reduction picks the next event: argmin over the concatenated
+    # [pending-commit times | thread times] vector.  A tie between the two
+    # halves lands in the commit half (first occurrence), preserving the
+    # historical ``t_cm <= t_th`` commit-wins rule bit for bit.
     ptimes = jnp.where(pend_addr >= 0, pend_time, INF)
-    tc = jnp.argmin(ptimes)
-    t_cm = ptimes[tc]
-    is_commit = t_cm <= t_th
+    k = jnp.argmin(jnp.concatenate([ptimes, next_time])).astype(jnp.int32)
+    is_commit = k < n_threads
+    tc = jnp.minimum(k, n_threads - 1)          # commit thread (dead if op)
+    t = jnp.where(is_commit, 0, k - n_threads)  # op thread (dead if commit)
+    t_min = jnp.where(is_commit, ptimes[tc], next_time[t])
     # Self-guarding: a lane past its horizon / event budget dispatches the
     # no-event pseudo-op, making the whole step an identity.  The unbatched
-    # driver's loop condition never lets this fire; the batched driver relies
+    # driver's loop condition never lets this fire; the batched drivers rely
     # on it so lanes that finish early idle for free (no per-lane select).
-    live = (events < c.max_events) & (jnp.minimum(t_th, t_cm) < c.horizon)
+    live = (events < c.max_events) & (t_min < c.horizon)
 
-    now = t_th
+    now = t_min
     instr = c.program[pc[t]]
     op, a, b, cc, imm = instr[0], instr[1], instr[2], instr[3], instr[4]
     ra, rb, rc = regs[t, a], regs[t, b], regs[t, cc]
     pc1 = pc[t] + 1
+    t_bit = jnp.uint32(1) << (t & 31).astype(jnp.uint32)
+    t_word = t >> 5
 
     def load_cost(ln):
-        mine = sharers[ln, t]
+        mine = (sharers[ln, t_word] & t_bit) > 0
         d = dirty[ln]
         return jnp.where(mine, C[I_HIT],
                          jnp.where((d >= 0) & (d != t), C[I_XFER], C[I_MISS]))
 
     def store_cost(ln, atomic):
         row = sharers[ln]
-        others = row.sum() - row[t]
-        only = row[t] & (others == 0)
+        total = jax.lax.population_count(row).sum().astype(jnp.int32)
+        mine = ((row[t_word] & t_bit) > 0).astype(jnp.int32)
+        others = total - mine
+        only = (mine > 0) & (others == 0)
         cost = jnp.where(only, C[I_ST_OWNED], C[I_ST_SHARED] + C[I_INV] * others)
         return (cost + jnp.where(atomic, C[I_ATOMIC], 0)).astype(jnp.int32)
 
@@ -194,7 +225,7 @@ def _step(c: SimConsts, s: SimState) -> SimState:
     def h_load():
         addr = rb + imm
         ln = addr >> isa.LINE_SHIFT
-        mine = sharers[ln, t]
+        mine = (sharers[ln, t_word] & t_bit) > 0
         d = dirty[ln]
         return default._replace(
             cost=load_cost(ln),
@@ -355,7 +386,7 @@ def _step(c: SimConsts, s: SimState) -> SimState:
         return default._replace(
             advance=no, clear_pend=yes,
             w_addr=addr, w_val=pend_val[tc],
-            excl_ln=ln, wake_addr=addr, wake_time=t_cm)
+            excl_ln=ln, wake_addr=addr, wake_time=t_min)
 
     def h_noevent():
         """Pseudo-op for finished lanes: touch nothing."""
@@ -426,15 +457,21 @@ def _step(c: SimConsts, s: SimState) -> SimState:
     wa = jnp.where(e.w_addr >= 0, e.w_addr, 0)
     mem2 = mem.at[wa].set(jnp.where(e.w_addr >= 0, e.w_val, mem[wa]))
 
-    # sharer registration (+ downgrade of a foreign dirty line)
+    # sharer registration (+ downgrade of a foreign dirty line): OR the
+    # actor's bit into its bitset word
+    a_bit = jnp.uint32(1) << (actor & 31).astype(jnp.uint32)
+    a_word = actor >> 5
     ls = jnp.where(e.share_ln >= 0, e.share_ln, 0)
-    sh2 = sharers.at[ls, actor].set((e.share_ln >= 0) | sharers[ls, actor])
+    sh2 = sharers.at[ls, a_word].set(jnp.where(
+        e.share_ln >= 0, sharers[ls, a_word] | a_bit, sharers[ls, a_word]))
     dr2 = dirty.at[ls].set(jnp.where((e.share_ln >= 0) & e.downgrade,
                                      -1, dirty[ls]))
-    # exclusive ownership (RMW / commit): invalidate every other sharer
+    # exclusive ownership (RMW / commit): invalidate every other sharer —
+    # the whole row collapses to the actor's lone bit
+    n_words = sharers.shape[1]
     le = jnp.where(e.excl_ln >= 0, e.excl_ln, 0)
-    sh2 = sh2.at[le].set(jnp.where(e.excl_ln >= 0,
-                                   jnp.arange(n_threads) == actor, sh2[le]))
+    lone = jnp.where(jnp.arange(n_words) == a_word, a_bit, jnp.uint32(0))
+    sh2 = sh2.at[le].set(jnp.where(e.excl_ln >= 0, lone, sh2[le]))
     dr2 = dr2.at[le].set(jnp.where(e.excl_ln >= 0, actor, dr2[le]))
 
     # pending-store queue (enqueue on STORE/STOREI, consume on commit)
@@ -472,7 +509,7 @@ def _initial_state(n_threads: int, mem_words: int, n_locks: int,
         prng=(seed.astype(jnp.uint32)
               + jnp.arange(n_threads, dtype=jnp.uint32) * jnp.uint32(2654435761)),
         mem=init_mem.astype(jnp.int32),
-        sharers=jnp.zeros((n_lines, n_threads), bool),
+        sharers=jnp.zeros((n_lines, bitset_words(n_threads)), jnp.uint32),
         dirty=jnp.full(n_lines, -1, jnp.int32),
         pend_addr=jnp.full(n_threads, -1, jnp.int32),
         pend_val=jnp.zeros(n_threads, jnp.int32),
@@ -543,7 +580,8 @@ def _make_run_batched(n_threads: int, mem_words: int, n_locks: int):
             prng=(seed[:, None].astype(jnp.uint32)
                   + lane_t.astype(jnp.uint32) * jnp.uint32(2654435761)),
             mem=init_mem.astype(jnp.int32),
-            sharers=jnp.zeros((n_cells, n_lines, n_threads), bool),
+            sharers=jnp.zeros((n_cells, n_lines, bitset_words(n_threads)),
+                              jnp.uint32),
             dirty=jnp.full((n_cells, n_lines), -1, jnp.int32),
             pend_addr=jnp.full((n_cells, n_threads), -1, jnp.int32),
             pend_val=jnp.zeros((n_cells, n_threads), jnp.int32),
@@ -595,16 +633,129 @@ def _make_run_map(n_threads: int, mem_words: int, n_locks: int):
     return run_map
 
 
+def _make_run_sched(n_threads: int, mem_words: int, n_locks: int,
+                    n_lanes: int, chunk: int):
+    """Chunked work-stealing lane scheduler over the batched step.
+
+    ``n_lanes`` lanes run a ``vmap`` of the step in fixed-size ``chunk``-step
+    bursts inside an outer ``lax.while_loop``.  After each burst, lanes whose
+    cell terminated (same condition the single-cell driver stops on) scatter
+    their stats into per-cell output slots and are refilled from the queue of
+    not-yet-started cells — the queued cell's init state is gathered into the
+    free lane.  Wall-clock therefore tracks ``sum(events) / n_lanes`` instead
+    of vmap's ``max(events)``, and every cell still executes its private
+    event sequence via the self-guarding step, so per-cell results are
+    bit-identical to ``mode="map"`` — only lane placement changes.
+
+    A lane whose queue ran dry parks with ``lane_cell = -1`` and a zero
+    horizon, making its steps free no-events until the loop ends.
+    """
+
+    def run(program, init_pc, init_regs, init_mem, n_active, seed,
+            horizon, max_events, costs, wa_base, wa_mask, wa_size):
+        n_cells = program.shape[0]
+        lanes = min(n_lanes, n_cells)
+
+        def cell_init(i):
+            return _initial_state(n_threads, mem_words, n_locks,
+                                  init_pc[i], init_regs[i], init_mem[i],
+                                  n_active[i], seed[i])
+
+        def lane_consts(lane_cell):
+            lc = jnp.clip(lane_cell, 0, n_cells - 1)
+            occupied = lane_cell >= 0
+            return SimConsts(
+                program=program[lc], costs=costs[lc], wa_base=wa_base[lc],
+                wa_mask=wa_mask[lc], wa_size=wa_size[lc],
+                horizon=jnp.where(occupied, horizon[lc], 0),
+                max_events=max_events[lc])
+
+        vstep = jax.vmap(_step)
+
+        def cond(carry):
+            lane_cell, next_cell, _, _ = carry
+            return (next_cell < n_cells) | jnp.any(lane_cell >= 0)
+
+        def body(carry):
+            lane_cell, next_cell, s, outs = carry
+            c = lane_consts(lane_cell)
+            s = jax.lax.fori_loop(0, chunk, lambda _, st: vstep(c, st), s)
+            # terminated lanes: exact negation of the step's ``live`` guard,
+            # so a detected lane is at the precise state the single-cell
+            # driver would have stopped in
+            t_th = s.next_time.min(1)
+            t_cm = jnp.where(s.pend_addr >= 0, s.pend_time, INF).min(1)
+            fin = (lane_cell >= 0) & (
+                (s.events >= c.max_events)
+                | (jnp.minimum(t_th, t_cm) >= c.horizon))
+            # scatter finished stats to their cell slot (index B = dropped)
+            idx = jnp.where(fin, lane_cell, n_cells)
+            outs = {
+                "acquisitions":
+                    outs["acquisitions"].at[idx].set(s.acq, mode="drop"),
+                "waited_acquisitions":
+                    outs["waited_acquisitions"].at[idx].set(s.waited_acq,
+                                                            mode="drop"),
+                "handover_sum":
+                    outs["handover_sum"].at[idx].set(s.hand_sum, mode="drop"),
+                "handover_count":
+                    outs["handover_count"].at[idx].set(s.hand_cnt,
+                                                       mode="drop"),
+                "events": outs["events"].at[idx].set(s.events, mode="drop"),
+                "sleeping":
+                    outs["sleeping"].at[idx].set((s.spin_addr >= 0).sum(1),
+                                                 mode="drop"),
+                "grant_value":
+                    outs["grant_value"].at[idx].set(s.mem, mode="drop"),
+            }
+            # work stealing: the i-th finished lane (in lane order) claims
+            # queue slot next_cell + i; lanes past the queue end park
+            rank = jnp.cumsum(fin.astype(jnp.int32)) - fin.astype(jnp.int32)
+            cand = next_cell + rank
+            gets = fin & (cand < n_cells)
+            lane_cell = jnp.where(fin, jnp.where(gets, cand, -1), lane_cell)
+            next_cell = jnp.minimum(next_cell + fin.sum(), n_cells)
+            fresh = jax.vmap(cell_init)(jnp.clip(lane_cell, 0, n_cells - 1))
+            s = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(
+                    gets.reshape((lanes,) + (1,) * (old.ndim - 1)), new, old),
+                fresh, s)
+            return lane_cell, next_cell, s, outs
+
+        lane_cell0 = jnp.arange(lanes, dtype=jnp.int32)
+        outs0 = {
+            "acquisitions": jnp.zeros((n_cells, n_threads), jnp.int32),
+            "waited_acquisitions": jnp.zeros((n_cells, n_threads), jnp.int32),
+            "handover_sum": jnp.zeros(n_cells, jnp.int32),
+            "handover_count": jnp.zeros(n_cells, jnp.int32),
+            "events": jnp.zeros(n_cells, jnp.int32),
+            "sleeping": jnp.zeros(n_cells, jnp.int32),
+            "grant_value": jnp.zeros((n_cells, mem_words), jnp.int32),
+        }
+        carry = (lane_cell0, jnp.int32(lanes),
+                 jax.vmap(cell_init)(lane_cell0), outs0)
+        return jax.lax.while_loop(cond, body, carry)[3]
+
+    return run
+
+
 @functools.lru_cache(maxsize=64)
 def _build_engine(n_threads: int, mem_words: int, n_locks: int, prog_len: int,
-                  batched: str | None = None):
+                  batched: str | None = None, n_lanes: int = 0,
+                  chunk: int = 0):
     """Compile an engine for a given shape set (everything else is an input).
 
     The cache key is shapes only; ``prog_len`` rides along for cache identity
     even though jit would also specialize on it.  ``batched`` selects the
-    sweep driver ("vmap" = lane-parallel, "map" = sequential cells); either
-    way a sweep is one compile and one dispatch, not one per cell.
+    sweep driver ("vmap" = lane-parallel, "map" = sequential cells, "sched" =
+    work-stealing lanes, keyed additionally on the ``n_lanes``/``chunk``
+    geometry); either way a sweep is one compile and one dispatch, not one
+    per cell.
     """
+    if batched == "sched":
+        return jax.jit(_make_run_sched(n_threads, mem_words, n_locks,
+                                       n_lanes, chunk))
+    assert n_lanes == 0 and chunk == 0, (batched, n_lanes, chunk)
     if batched == "vmap":
         return jax.jit(_make_run_batched(n_threads, mem_words, n_locks))
     if batched == "map":
@@ -662,12 +813,20 @@ def _broadcast_cells(x, n_cells: int, dtype) -> np.ndarray:
     return arr
 
 
+# Scheduler defaults, tuned on CPU: few lanes (the per-step cost of the
+# scalar scatter/gather step scales with lane count there) and bursts long
+# enough to amortize the refill check's gather/select over the lane state.
+DEFAULT_LANES = 4
+DEFAULT_CHUNK = 512
+
+
 def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
               init_pc: np.ndarray, init_regs: np.ndarray,
               n_active, seeds, wa_base, wa_size,
               horizon, max_events=2_000_000, costs=None,
               init_mem: np.ndarray | None = None,
-              mode: str = "auto") -> dict:
+              mode: str = "auto", lanes: int | None = None,
+              chunk: int | None = None) -> dict:
     """Run a batch of independent simulations as ONE compiled, vmapped call.
 
     Every per-cell argument carries a leading batch axis of size B; scalars
@@ -689,10 +848,14 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
       horizon/max_events: (B,) or scalar int32.
       costs:     Costs, (9,) array, or (B, 9) array; default DEFAULT_COSTS.
       init_mem:  (B, mem_words) int32 or None for all-zeros.
-      mode:      "vmap" runs all cells lane-parallel (best on accelerators),
-        "map" runs them sequentially inside one compiled program (best on
-        CPU — no idle-lane cost), "auto" picks by backend.  Results are
-        bit-identical across modes.
+      mode:      "vmap" runs all cells lane-parallel (best on accelerators
+        with uniform cells), "map" runs them sequentially inside one compiled
+        program, "sched" runs a work-stealing lane scheduler (pays
+        ~sum(events) like "map" but keeps ``lanes`` cells in flight — the
+        right choice for skewed sweeps), "auto" picks by backend.  Results
+        are bit-identical across all modes.
+      lanes/chunk: scheduler geometry ("sched" only) — number of parallel
+        lanes (clamped to B) and steps per burst between refill checks.
 
     Returns a dict of stacked numpy arrays: per-thread stats have shape
     (B, n_threads), scalars (B,), and ``grant_value`` (B, mem_words) holds
@@ -700,7 +863,15 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
     """
     if mode == "auto":
         mode = "map" if jax.default_backend() == "cpu" else "vmap"
-    assert mode in ("vmap", "map"), mode
+    assert mode in ("vmap", "map", "sched"), mode
+    if mode == "sched":
+        lanes = DEFAULT_LANES if lanes is None else lanes
+        chunk = DEFAULT_CHUNK if chunk is None else chunk
+        assert lanes >= 1 and chunk >= 1, (lanes, chunk)
+    else:
+        assert lanes is None and chunk is None, \
+            f"lanes/chunk only apply to mode='sched', got mode={mode!r}"
+        lanes = chunk = 0
     programs = np.asarray(programs, np.int32)
     assert programs.ndim == 3 and programs.shape[2] == 5, programs.shape
     n_cells, prog_len = programs.shape[0], programs.shape[1]
@@ -725,7 +896,7 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
     assert init_mem.shape == (n_cells, mem_words), init_mem.shape
 
     engine = _build_engine(n_threads, mem_words, n_locks, prog_len,
-                           batched=mode)
+                           batched=mode, n_lanes=lanes, chunk=chunk)
     out = engine(jnp.asarray(programs), jnp.asarray(init_pc),
                  jnp.asarray(init_regs), jnp.asarray(init_mem),
                  jnp.asarray(_broadcast_cells(n_active, n_cells, np.int32)),

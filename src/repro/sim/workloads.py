@@ -93,7 +93,8 @@ class SweepSpec:
                       count_collisions=self.count_collisions)
 
 
-def run_sweep(spec: SweepSpec, *, mode: str = "auto") -> list[dict]:
+def run_sweep(spec: SweepSpec, *, mode: str = "auto",
+              lanes: int | None = None, chunk: int | None = None) -> list[dict]:
     """Run every cell of ``spec`` in one compiled call.
 
     Returns one dict per cell, in :meth:`SweepSpec.cells` order.  Each dict
@@ -102,7 +103,8 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto") -> list[dict]:
     produces (``throughput``, ``acquisitions``, ``avg_handover``, ``mem``,
     ...), with per-thread arrays sliced to the cell's real thread count.
     ``mode`` selects the batched execution strategy (see
-    :func:`repro.sim.engine.run_sweep`); results are mode-independent.
+    :func:`repro.sim.engine.run_sweep`; ``lanes``/``chunk`` configure the
+    ``"sched"`` work-stealing driver); results are mode-independent.
     """
     cells = spec.cells()
     built = []
@@ -133,7 +135,7 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto") -> list[dict]:
         costs=np.stack([cell.costs.to_array() for cell in cells]),
         init_mem=np.stack([pad_mem(init_mem, m_max)
                            for *_, init_mem in built]),
-        mode=mode,
+        mode=mode, lanes=lanes, chunk=chunk,
     )
 
     results = []
@@ -179,6 +181,43 @@ def sweep_curves(spec: SweepSpec, value: str = "throughput") -> dict:
                                     for s in _as_tuple(spec.seeds)]))
                    for t in _as_tuple(spec.threads)]
             for lock in _as_tuple(spec.locks)}
+
+
+def pack_engine_cells(cells, *, cs_work: int = 4, ncs_max: int = 200,
+                      n_locks: int = 1, seeds=1) -> tuple[np.ndarray, dict]:
+    """Pad mixed ``(lock, n_threads, horizon)`` cells into one engine call.
+
+    The :class:`SweepSpec` path shares a single horizon across the sweep;
+    this is the low-level builder for deliberately *skewed* sweeps — every
+    cell carries its own horizon — used by ``benchmarks.bench_engine`` and
+    the scheduler equivalence tests.  Returns ``(programs, kwargs)`` ready
+    for ``engine.run_sweep(programs, **kwargs)``.
+    """
+    layouts = [Layout(n_threads=t, n_locks=n_locks) for _, t, _ in cells]
+    t_max = max(layout.n_threads for layout in layouts)
+    m_max = max(layout.mem_words for layout in layouts)
+    progs, pcs, regss, mems = [], [], [], []
+    for (lock, _, _), layout in zip(cells, layouts):
+        prog = build_mutexbench(lock, layout, cs_work=cs_work,
+                                ncs_max=ncs_max)
+        pc, regs = init_state(layout)
+        pc, regs = pad_threads(pc, regs, t_max)
+        gen_mem = INIT_MEM_GEN.get(lock)
+        init_mem = gen_mem(layout) if gen_mem else np.zeros(layout.mem_words,
+                                                            np.int32)
+        progs.append(pad_program(prog))
+        pcs.append(pc)
+        regss.append(regs)
+        mems.append(pad_mem(init_mem, m_max))
+    return np.stack(progs), dict(
+        mem_words=m_max, n_locks=n_locks,
+        init_pc=np.stack(pcs), init_regs=np.stack(regss),
+        n_active=np.asarray([layout.n_threads for layout in layouts]),
+        seeds=np.asarray(seeds, np.uint32),
+        wa_base=np.asarray([layout.wa_base for layout in layouts]),
+        wa_size=np.asarray([layout.wa_size for layout in layouts]),
+        horizon=np.asarray([h for *_, h in cells], np.int32),
+        init_mem=np.stack(mems))
 
 
 def run_contention(lock: str, n_threads: int, *, cs_work: int = 4,

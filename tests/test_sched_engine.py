@@ -1,0 +1,87 @@
+"""Work-stealing scheduler validation: ``mode="sched"`` must be bit-identical
+to ``mode="map"`` on skewed sweeps (only lane placement may change), refill
+must handle every queue/lane geometry, and a sched sweep must cost a single
+engine compilation."""
+
+import numpy as np
+
+from repro.sim import SweepSpec
+from repro.sim.engine import engine_cache_info
+from repro.sim import engine
+from repro.sim.workloads import pack_engine_cells, run_sweep
+
+OUT_KEYS = ("acquisitions", "waited_acquisitions", "handover_sum",
+            "handover_count", "events", "sleeping", "grant_value")
+
+
+def _skewed_sweep_args():
+    """Engine-level sweep with uneven thread counts, horizons, and programs:
+    one heavy cell towering over many light ones."""
+    cells = [("twa", 6, 150_000), ("ticket", 2, 12_000), ("mcs", 3, 12_000),
+             ("ticket", 5, 20_000), ("twa", 2, 8_000), ("anderson", 4, 15_000),
+             ("ticket", 3, 0), ("twa", 4, 25_000)]  # one zero-horizon cell
+    return pack_engine_cells(cells, ncs_max=100, seeds=5)
+
+
+def _assert_same(ref: dict, out: dict, ctx) -> None:
+    for key in OUT_KEYS:
+        assert np.array_equal(ref[key], out[key]), (ctx, key)
+
+
+def test_sched_matches_map_on_skewed_sweep():
+    """Uneven n_active / horizons / programs: every per-cell stat — including
+    the zero-horizon cell's untouched init memory — must match map mode."""
+    programs, kw = _skewed_sweep_args()
+    ref = engine.run_sweep(programs, mode="map", **kw)
+    out = engine.run_sweep(programs, mode="sched", lanes=3, chunk=128, **kw)
+    _assert_same(ref, out, "skewed")
+    # the zero-horizon cell ran no events and kept its initial memory
+    assert ref["events"][6] == 0
+    assert np.array_equal(out["grant_value"][6], kw["init_mem"][6])
+
+
+def test_sched_lane_refill_edge_cases():
+    """Queue/lane geometry edges: more lanes than cells (B < lanes), many
+    refill waves (B >> lanes), and every lane finishing in the same chunk."""
+    programs, kw = _skewed_sweep_args()
+    ref = engine.run_sweep(programs, mode="map", **kw)
+    for lanes, chunk in ((32, 64),       # B < lanes: surplus lanes idle
+                         (1, 64),        # B >> lanes: B refill waves
+                         (8, 1 << 20)):  # all lanes finish in chunk one
+        out = engine.run_sweep(programs, mode="sched",
+                               lanes=lanes, chunk=chunk, **kw)
+        _assert_same(ref, out, (lanes, chunk))
+
+
+def test_sched_workloads_plumbing_bit_identity():
+    """The SweepSpec path must thread lanes/chunk through to the engine and
+    stay bit-identical to map mode."""
+    spec = SweepSpec(locks=("ticket", "twa"), threads=(2, 5), seeds=(1, 2),
+                     horizon=30_000)
+    ref = run_sweep(spec, mode="map")
+    out = run_sweep(spec, mode="sched", lanes=2, chunk=100)
+    for a, b in zip(ref, out):
+        assert np.array_equal(a["acquisitions"], b["acquisitions"])
+        assert a["events"] == b["events"]
+        assert np.array_equal(a["mem"], b["mem"])
+        assert a["throughput"] == b["throughput"]
+
+
+def test_sched_single_compile_and_geometry_keyed_cache():
+    """One sched sweep = one engine compile; re-running with different data
+    reuses it; a different lane geometry is a different cache entry."""
+    spec = SweepSpec(locks=("ticket", "mcs"), threads=(2, 4), seeds=1,
+                     horizon=20_000)
+    before = engine_cache_info()
+    run_sweep(spec, mode="sched", lanes=2, chunk=64)
+    after = engine_cache_info()
+    assert after.currsize - before.currsize == 1
+    assert after.misses - before.misses == 1
+    run_sweep(SweepSpec(locks=("ticket", "mcs"), threads=(2, 4), seeds=7,
+                        horizon=20_000), mode="sched", lanes=2, chunk=64)
+    again = engine_cache_info()
+    assert again.currsize == after.currsize
+    assert again.misses == after.misses
+    run_sweep(spec, mode="sched", lanes=3, chunk=64)
+    keyed = engine_cache_info()
+    assert keyed.currsize - again.currsize == 1
