@@ -11,6 +11,11 @@ two effects is the point of the grid.
 
 The whole grid — locks x C_INV x C_XFER x seeds — is one SweepSpec on the
 ``costs`` axis and therefore ONE compiled engine call.
+
+A second cell sweeps the ``sem_permits`` axis (ROADMAP's mutex→semaphore
+continuum): one twa-sem SweepSpec over permits, asserting throughput grows
+monotonically-ish with capacity — permits=1 is a FIFO mutex, larger K
+admits K concurrent critical sections.  Runs in ``--smoke`` too.
 """
 
 from __future__ import annotations
@@ -34,6 +39,33 @@ SMOKE_C_INVS = (0, 24)
 SMOKE_C_XFERS = (90,)
 SMOKE_SEEDS = (1,)
 SMOKE_HORIZON = 150_000
+
+SEM_PERMITS = (1, 2, 4, 8)
+SEM_THREADS = 32
+
+
+def run_sem_permits(smoke: bool = False) -> dict[int, float]:
+    """The mutex→semaphore continuum as ONE SweepSpec on ``sem_permits``."""
+    horizon = SMOKE_HORIZON if smoke else HORIZON
+    seeds = SMOKE_SEEDS if smoke else SEEDS
+    spec = SweepSpec(locks="twa-sem", threads=SEM_THREADS, seeds=seeds,
+                     sem_permits=SEM_PERMITS, horizon=horizon)
+    results = run_sweep(spec)
+    tput = {}
+    for permits in SEM_PERMITS:
+        vals = [r["throughput"] for r in results
+                if r["sem_permits"] == permits]
+        tput[permits] = float(np.median(vals))
+        emit(f"fig9/twa-sem/permits={permits}", f"{tput[permits]:.6f}",
+             "acq_per_cycle")
+    emit("fig9/sem_scaling",
+         f"{tput[SEM_PERMITS[-1]] / tput[SEM_PERMITS[0]]:.2f}x",
+         "mutex->semaphore continuum (permits "
+         f"{SEM_PERMITS[0]}->{SEM_PERMITS[-1]})")
+    assert tput[SEM_PERMITS[-1]] > 1.5 * tput[SEM_PERMITS[0]], tput
+    assert all(tput[b] > 0.8 * tput[a]  # monotone up to seed noise
+               for a, b in zip(SEM_PERMITS, SEM_PERMITS[1:])), tput
+    return tput
 
 
 def run(smoke: bool = False) -> dict:
@@ -63,7 +95,8 @@ def run(smoke: bool = False) -> dict:
         emit(f"fig9/ratio_span/cxfer={cx}",
              f"{ratios[c_invs[0], cx]:.3f}->{ratios[c_invs[-1], cx]:.3f}",
              "invalidation-diameter sensitivity")
-    return {"throughput": tput, "ratios": ratios}
+    sem = run_sem_permits(smoke)
+    return {"throughput": tput, "ratios": ratios, "sem_permits": sem}
 
 
 if __name__ == "__main__":

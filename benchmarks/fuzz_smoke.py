@@ -1,0 +1,53 @@
+"""Fuzz smoke — the ``sim.check`` differential fuzzer as a benchmark suite.
+
+Runs a small deterministic batch (composed lock scenarios + random ISA
+programs) through the NumPy oracle and all three engine sweep modes,
+asserting zero differential/invariant failures, then runs one mutation
+self-test (``eager_store``) to prove the checker still catches what it
+claims to catch.  Emits throughput CSV (oracle events/s — the oracle is
+pure Python, so this number is the fuzzing budget ceiling).
+
+The full 200-case run with a per-CI-run seed lives in the workflow as
+``python -m repro.sim.check --cases 200 --seed from-run-id``; this suite is
+the fast always-on canary inside ``benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.sim.check import fuzz, generate_batch
+
+from .common import emit
+
+CASES = 48
+SMOKE_CASES = 19  # 11/0.6 threshold: every SIM_LOCKS entry composed once
+SEED = 20260731
+
+
+def run(smoke: bool = False) -> dict:
+    n_cases = SMOKE_CASES if smoke else CASES
+    scenarios = generate_batch(n_cases, SEED)
+    t0 = time.time()
+    report = fuzz(scenarios)  # oracle vs map/vmap/sched + invariants
+    dt = time.time() - t0
+    emit("fuzz/cases", n_cases,
+         f"composed+random, seed={SEED}, modes=map/vmap/sched")
+    emit("fuzz/oracle_events", report.total_events,
+         f"{report.total_events / max(dt, 1e-9):,.0f} events/s")
+    emit("fuzz/failures", len(report.failures),
+         "differential+invariants" if report.ok else report.summary())
+    assert report.ok, report.summary()
+
+    # mutation self-test: an injected store-visibility bug MUST be caught
+    mutated = fuzz(scenarios, modes=("map",),
+                   oracle_mutate=("eager_store",))
+    emit("fuzz/mutation_caught", len(mutated.failures),
+         "eager_store self-test (must be > 0)")
+    assert not mutated.ok, "eager_store mutation was not caught"
+    return {"failures": 0, "events": int(report.total_events),
+            "mutation_caught": len(mutated.failures)}
+
+
+if __name__ == "__main__":
+    run()

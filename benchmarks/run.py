@@ -29,6 +29,7 @@ SUITES = [
     ("threads", "benchmarks.threads_microbench"),
     ("admission", "benchmarks.framework_admission"),
     ("bench_engine", "benchmarks.bench_engine"),
+    ("fuzz", "benchmarks.fuzz_smoke"),
 ]
 
 

@@ -13,7 +13,7 @@ import threading
 
 from repro.core import (DistributedTWALock, DistributedTicketLock,
                         InMemoryKVStore, LOCK_CLASSES, make_lock)
-from repro.sim import Layout, read_collision_counters
+from repro.sim import read_collision_counters
 from repro.sim.programs import SIM_LOCKS
 from repro.sim.workloads import SweepSpec, run_contention, run_sweep
 
@@ -41,8 +41,7 @@ print("\n== waiting-array collisions (twa, T=32, 4 locks, paper §3) ==")
 for wa_size in (16, 128, 2048):
     r = run_contention("twa", 32, n_locks=4, wa_size=wa_size,
                        count_collisions=True, horizon=400_000)
-    wakes, futile = read_collision_counters(
-        r["mem"], Layout(n_threads=32, n_locks=4, wa_size=wa_size))
+    wakes, futile = read_collision_counters(r["mem"], r["layout"])
     rate = futile.sum() / max(wakes.sum(), 1)
     print(f"  wa_size={wa_size:>4}: collision rate={rate:.3f} "
           f"({futile.sum()} futile / {wakes.sum()} wakeups)")

@@ -1,0 +1,39 @@
+"""sim.check — differential fuzzing & model checking for the lockVM.
+
+Three layers:
+  * :mod:`oracle`     — a pure-NumPy sequential reference interpreter for the
+    full ISA, executing the *same* packed program/layout arrays as
+    ``sim.engine`` under the same :data:`engine.EVENT_ORDER_CONTRACT`.
+  * :mod:`generate`   — structured random generators: well-formed random ISA
+    programs, random lock/thread/wa/permit/cost geometries, and composed
+    scenarios wrapping every ``SIM_LOCKS`` generator in randomized critical
+    sections with shared occupancy counters.
+  * :mod:`invariants` + :mod:`runner` — oracle vs ``run_sweep`` differential
+    execution (bit-identical stats across ``mode="map"/"vmap"/"sched"``),
+    engine-independent invariants, a greedy shrinker, and a replayable
+    ``.npz`` corpus format.
+
+See README.md in this directory for the invariant catalog and the
+reproduce/shrink workflow.
+"""
+
+from .generate import (PAD_LOCKS, PAD_MEM_WORDS, PAD_THREADS, Scenario,
+                       gen_composed_scenario, gen_geometry,
+                       gen_random_scenario, generate_batch)
+from .invariants import check_invariants
+from .oracle import ORACLE_MUTATIONS, Trace, run_oracle
+from .runner import (MODES, FuzzReport, case_fails, case_problems,
+                     check_case, count_instructions, failure_classes, fuzz,
+                     load_scenario, run_engine_batch, run_oracle_case,
+                     save_scenario, shrink)
+
+__all__ = [
+    "Scenario", "gen_geometry", "gen_random_scenario",
+    "gen_composed_scenario", "generate_batch",
+    "PAD_THREADS", "PAD_LOCKS", "PAD_MEM_WORDS",
+    "run_oracle", "Trace", "ORACLE_MUTATIONS",
+    "check_invariants", "check_case", "case_problems", "case_fails",
+    "failure_classes", "fuzz", "FuzzReport", "shrink",
+    "count_instructions", "run_engine_batch", "run_oracle_case",
+    "save_scenario", "load_scenario", "MODES",
+]

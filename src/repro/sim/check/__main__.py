@@ -1,0 +1,110 @@
+"""CLI for the differential fuzzer — the CI entry point.
+
+    PYTHONPATH=src python -m repro.sim.check --cases 200 --seed from-run-id
+
+Runs a mixed batch (composed lock scenarios + random ISA programs) through
+the oracle and all three engine sweep modes, checks the invariant catalog,
+and on failure greedily shrinks the first failing case and writes it as a
+replayable ``.npz`` under ``--artifact-dir`` before exiting nonzero.
+
+``--seed from-run-id`` derives the seed from ``$GITHUB_RUN_ID`` (falling
+back to 0), so every CI run explores a fresh region while staying exactly
+reproducible from the run id.
+
+``--mutate <name>`` injects a known oracle bug (see
+``oracle.ORACLE_MUTATIONS``) — the run then MUST fail; this is the
+self-test that proves the checker can catch what it claims to catch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+from . import (MODES, count_instructions, fuzz, generate_batch,
+               load_scenario, save_scenario, shrink)
+
+
+def _resolve_seed(spec: str) -> int:
+    if spec == "from-run-id":
+        return int(os.environ.get("GITHUB_RUN_ID", "0")) & 0x7FFFFFFF
+    return int(spec)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.sim.check")
+    ap.add_argument("--cases", type=int, default=200)
+    ap.add_argument("--seed", default="0",
+                    help="int, or 'from-run-id' to derive from "
+                         "$GITHUB_RUN_ID")
+    ap.add_argument("--modes", default=",".join(MODES),
+                    help="comma-separated engine sweep modes to diff")
+    ap.add_argument("--artifact-dir", default="",
+                    help="where to write the shrunk failing case (.npz)")
+    ap.add_argument("--mutate", default="",
+                    help="inject a named oracle bug (self-test: must fail)")
+    ap.add_argument("--replay", default="",
+                    help="replay one corpus .npz instead of generating")
+    ap.add_argument("--no-shrink", action="store_true")
+    args = ap.parse_args(argv)
+
+    seed = _resolve_seed(args.seed)
+    modes = tuple(m for m in args.modes.split(",") if m)
+    mutate = tuple(m for m in args.mutate.split(",") if m)
+
+    t0 = time.time()
+    if args.replay:
+        scenarios = [load_scenario(args.replay)]
+        print(f"replaying {args.replay}")
+    else:
+        scenarios = generate_batch(args.cases, seed)
+        print(f"generated {len(scenarios)} scenarios (seed={seed})")
+    report = fuzz(scenarios, modes=modes, oracle_mutate=mutate)
+    dt = time.time() - t0
+    print(report.summary())
+    print(f"elapsed {dt:.1f}s "
+          f"({report.total_events / max(dt, 1e-9):,.0f} oracle events/s)")
+
+    if report.ok:
+        if mutate:
+            print(f"SELF-TEST FAILURE: mutation {mutate} was NOT caught")
+            return 2
+        return 0
+
+    idx, scenario, problems = report.failures[0]
+    print(f"\nfirst failing case {idx}: {problems[0]}")
+    if not args.no_shrink:
+        # shrink against the modes that actually diverged (a sched-only
+        # bug must stay visible to the shrink predicate); invariant-only
+        # failures re-check with the cheapest mode
+        failed_modes = tuple(sorted(
+            {p.split("[", 1)[1].split("]", 1)[0] for p in problems
+             if p.startswith("differential[")})) or ("map",)
+        print(f"shrinking (modes={','.join(failed_modes)} + invariants) ...")
+        try:
+            scenario = shrink(scenario, modes=failed_modes,
+                              oracle_mutate=mutate)
+            print(f"shrunk to {count_instructions(scenario.program)} "
+                  f"instructions, {scenario.n_active} threads, "
+                  f"horizon {scenario.horizon}")
+        except Exception as e:  # noqa: BLE001 - still save the witness
+            print(f"shrink failed ({e!r}); saving the unshrunk case")
+    if args.artifact_dir:
+        os.makedirs(args.artifact_dir, exist_ok=True)
+        path = os.path.join(args.artifact_dir,
+                            f"shrunk_seed{seed}_case{idx}.npz")
+        save_scenario(path, scenario, note="; ".join(problems[:4]))
+        print(f"wrote {path} — replay with: python -m repro.sim.check "
+              f"--replay {path}")
+    if mutate:
+        how = "caught (shrink skipped)" if args.no_shrink \
+            else "caught and shrunk"
+        print(f"self-test OK: mutation {mutate} {how}")
+        return 0
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,359 @@
+"""Structured random scenario generators for the differential fuzzer.
+
+Two scenario families:
+
+  * **random** — random-but-well-formed ISA programs.  Well-formedness is
+    enforced structurally from the :data:`repro.sim.isa.OPCODES` metadata
+    table: branch targets stay inside the generated body, every memory
+    operand is ``addr-register + small offset`` where address registers are
+    init-time constants the random instructions can never overwrite (HASH
+    may rewrite one, but HASH output is in the waiting array by
+    construction), and the body is wrapped in a guaranteed-HALT harness (a
+    protected iteration counter) so programs terminate even without the
+    horizon.  SPINs watch the same shared lines the stores/RMWs hit, so
+    wakeup paths are exercised rather than deadlocking immediately.
+
+  * **composed** — every ``SIM_LOCKS`` generator wrapped in a randomized
+    critical section touching shared occupancy counters
+    (:func:`repro.sim.programs.build_occupancy_probe`), over random
+    lock/thread/wa_size/permits/threshold/cost geometries.  These carry lock
+    semantics, so the invariant layer can check exclusion/permit caps,
+    conservation, ticket FIFO and deadlock-freedom on top of the
+    oracle-vs-engine differential.
+
+Every scenario in a batch is padded to the same shapes (``PAD_THREADS``,
+``PAD_MEM_WORDS``, ``PAD_LOCKS``, ``PROG_LEN``) so one fuzz run costs ONE
+engine compile per sweep mode, exactly like a figure sweep.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace as _dc_replace
+
+import numpy as np
+
+from .. import isa
+from ..costs import Costs
+from ..programs import (INIT_MEM_GEN, Layout, PROG_LEN, SIM_LOCKS,
+                        build_mutexbench, build_occupancy_probe, init_state,
+                        pad_mem, pad_program, pad_threads)
+
+# Shared padded shapes for a fuzz batch (one engine compile per mode).
+PAD_THREADS = 8
+PAD_LOCKS = 2
+_WA_SIZES = (8, 16, 32, 64)
+PAD_MEM_WORDS = max(
+    Layout(n_threads=PAD_THREADS, n_locks=PAD_LOCKS, wa_size=max(_WA_SIZES),
+           private_arrays=pa).mem_words for pa in (False, True))
+
+# Ticket-family mutexes: ACQ events must observe strictly increasing R_TX
+# per lock (FIFO hand-off).  twa-sem is ticket-based but admits K concurrent
+# owners, so its ACQ order is only K-bounded, not strict.
+TICKET_FIFO_LOCKS = frozenset(
+    {"ticket", "twa", "twa-id", "twa-staged", "tkt-dual", "partitioned",
+     "anderson"})
+# Locks whose releases advance the shared OFF_GRANT word (partitioned uses
+# per-sector grant slots, anderson uses waiting-array flags instead).
+GRANT_WORD_LOCKS = frozenset(
+    {"ticket", "twa", "twa-id", "twa-staged", "tkt-dual", "twa-sem"})
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One fuzz case: everything both the oracle and the engine need."""
+
+    kind: str              # "random" | "composed"
+    lock: str | None
+    program: np.ndarray    # (PROG_LEN, 5) int32, padded
+    init_pc: np.ndarray    # (PAD_THREADS,) int32
+    init_regs: np.ndarray  # (PAD_THREADS, N_REGS) int32
+    init_mem: np.ndarray   # (PAD_MEM_WORDS,) int32
+    n_active: int
+    wa_base: int
+    wa_size: int
+    horizon: int
+    max_events: int
+    seed: int
+    costs: np.ndarray      # (9,) int32
+    meta: dict             # invariant inputs: cap, layout kwargs, ...
+
+    # Padded shapes shared by every scenario of a batch.
+    n_threads: int = PAD_THREADS
+    mem_words: int = PAD_MEM_WORDS
+    n_locks: int = PAD_LOCKS
+
+    def replace(self, **kw) -> "Scenario":
+        return _dc_replace(self, **kw)
+
+    def engine_kwargs(self) -> dict:
+        """Single-cell kwargs for ``run_oracle`` / ``engine.debug_states``."""
+        return dict(n_threads=self.n_threads, mem_words=self.mem_words,
+                    n_locks=self.n_locks, init_pc=self.init_pc,
+                    init_regs=self.init_regs, init_mem=self.init_mem,
+                    n_active=self.n_active, seed=self.seed,
+                    wa_base=self.wa_base, wa_size=self.wa_size,
+                    horizon=self.horizon, max_events=self.max_events,
+                    costs=self.costs)
+
+
+def gen_costs(rng: np.random.Generator) -> np.ndarray:
+    """Random-but-plausible coherence costs (C_LOCAL >= 1 so time advances)."""
+    return Costs(
+        C_LOCAL=int(rng.integers(1, 4)),
+        C_HIT=int(rng.integers(1, 5)),
+        C_MISS=int(rng.integers(20, 81)),
+        C_XFER=int(rng.integers(30, 121)),
+        C_STORE_OWNED=int(rng.integers(1, 7)),
+        C_STORE_SHARED=int(rng.integers(5, 31)),
+        C_INV=int(rng.integers(0, 25)),
+        C_ATOMIC=int(rng.integers(0, 41)),
+        C_WAKE=int(rng.integers(1, 9)),
+    ).to_array()
+
+
+def gen_geometry(rng: np.random.Generator, lock: str | None = None) -> dict:
+    """Random lock/thread/wa_size/permits/cost geometry within pad limits."""
+    n_threads = int(rng.integers(2, PAD_THREADS + 1))
+    n_locks = int(rng.integers(1, PAD_LOCKS + 1))
+    private_arrays = bool(rng.integers(0, 2))
+    if lock == "anderson" and n_locks > 1:
+        private_arrays = True  # cross-lock aliasing on bool flags is unsound
+    return dict(
+        n_threads=n_threads,
+        n_locks=n_locks,
+        wa_size=int(rng.choice(_WA_SIZES)),
+        private_arrays=private_arrays,
+        long_term_threshold=int(rng.integers(1, 4)),
+        sem_permits=int(rng.integers(1, n_threads + 1)),
+        horizon=int(rng.integers(1_500, 4_000)),
+        max_events=6_000,
+        seed=int(rng.integers(1, 2**31 - 1)),
+        costs=gen_costs(rng),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Random ISA programs
+# ---------------------------------------------------------------------------
+
+# Register partition for random programs.  Address registers are written
+# only at init (or by HASH, whose output is a valid waiting-array address);
+# random instructions may only write DATA_REGS.
+ADDR_REGS = (isa.R_LOCK, isa.R_NODE, isa.R_AT)
+DATA_REGS = (isa.R_TX, isa.R_G, isa.R_DX, isa.R_U, isa.R_V, isa.R_K,
+             isa.R_W, isa.R_T1, isa.R_T2)
+# R_LIDX stays 0 (valid lock index for ACQ/REL); R_NX is the harness
+# iteration counter; R_Z stays 0 by convention.
+_CTR = isa.R_NX
+
+# Opcode pool with sampling weights: memory traffic and branches dominate,
+# spins are present but rare enough that full-batch deadlocks stay uncommon.
+_POOL = (
+    (isa.LOAD, 10), (isa.STORE, 9), (isa.STOREI, 5),
+    (isa.FADD, 8), (isa.SWAP, 3), (isa.CASZ, 3),
+    (isa.ADDI, 6), (isa.MOVI, 4), (isa.MOV, 3), (isa.SUB, 3),
+    (isa.MULI, 2), (isa.ANDI, 2), (isa.HASH, 3),
+    (isa.BEQ, 2), (isa.BNE, 2), (isa.BLE, 2), (isa.BGT, 2),
+    (isa.BEQI, 2), (isa.BNEI, 2), (isa.BLEI, 2), (isa.BGTI, 2),
+    (isa.JMP, 1),
+    (isa.WORKI, 3), (isa.WORKR, 2), (isa.PRNG, 3),
+    (isa.SPIN_EQ, 1), (isa.SPIN_NE, 2), (isa.SPIN_EQI, 1),
+    (isa.SPIN_NEI, 2), (isa.SPIN_GE, 1),
+    (isa.ACQ, 2), (isa.REL, 2),
+    (isa.NOP, 1), (isa.HALT, 1),
+)
+_POOL_OPS = np.asarray([op for op, _ in _POOL])
+_POOL_P = np.asarray([w for _, w in _POOL], np.float64)
+_POOL_P /= _POOL_P.sum()
+
+
+def _rand_mem_operand(rng: np.random.Generator) -> tuple[int, int]:
+    """(addr_reg, imm) pairs guaranteed in-bounds.
+
+    R_LOCK-based offsets hit the first three lock sectors (shared, contended
+    — this is where SPINs get their wakeups), R_NODE the thread's own node
+    sector (private), R_AT offset 0 (R_AT always holds a waiting-array
+    address: wa_base initially, HASH output afterwards).
+    """
+    base = int(rng.choice((isa.R_LOCK, isa.R_LOCK, isa.R_NODE, isa.R_AT)))
+    if base == isa.R_LOCK:
+        return base, int(rng.integers(0, 3 * isa.WORDS_PER_SECTOR))
+    if base == isa.R_NODE:
+        return base, int(rng.integers(0, isa.MCS_NODE_STRIDE))
+    return base, 0
+
+
+def gen_random_program(rng: np.random.Generator, body_len: int = 40,
+                       iters: int = 3) -> np.ndarray:
+    """A well-formed random program: harness(iters) { random body }.
+
+    Structure::
+
+        0:            MOVI R_NX, iters
+        1 .. 1+body:  random instructions (branch targets confined here)
+        epilogue:     ADDI R_NX, R_NX, -1 ; BGTI R_NX, 0 -> 1 ; HALT
+
+    Any internal loop still terminates at the horizon (every op costs >= 1
+    cycle), and a body with no backward branches HALTs after ``iters``
+    passes — the guaranteed-HALT property random fuzzing needs so that the
+    "stalled forever" engine state is reachable only through SPINs, never
+    through runaway straight-line execution.
+    """
+    body_lo, body_hi = 1, 1 + body_len  # branch targets live in [lo, hi)
+    rows = [[isa.MOVI, _CTR, 0, 0, iters]]
+    for _ in range(body_len):
+        op = int(rng.choice(_POOL_OPS, p=_POOL_P))
+        info = isa.OPCODES[op]
+        a = b = c = imm = 0
+        for field_name, role in (("a", info.a), ("b", info.b), ("c", info.c)):
+            if role == "rdst":
+                val = int(rng.choice(DATA_REGS))
+            elif role == "rsrc":
+                val = int(rng.choice(DATA_REGS + (isa.R_Z, isa.R_TID)))
+            elif role == "lidx":
+                val = isa.R_LIDX  # always 0, always valid
+            elif role == "const":
+                val = int(rng.integers(-4, 5))
+            else:
+                val = 0
+            if field_name == "a":
+                a = val
+            elif field_name == "b":
+                b = val
+            else:
+                c = val
+        if info.kind in ("mem", "rmw", "spin"):
+            base, imm = _rand_mem_operand(rng)
+            if info.a == "raddr":
+                a = base
+            else:
+                b = base
+        elif info.imm == "target":
+            imm = int(rng.integers(body_lo, body_hi))
+        elif info.imm == "val":
+            imm = int(rng.integers(-16, 17))
+        elif info.imm == "cost":
+            imm = int(rng.integers(1, 25))
+        elif info.imm == "mod":
+            imm = int(rng.integers(1, 17))
+        if op == isa.HASH:
+            a = isa.R_AT  # HASH output is a valid waiting-array address
+        rows.append([op, a, b, c, imm])
+    rows.append([isa.ADDI, _CTR, _CTR, 0, -1])
+    rows.append([isa.BGTI, _CTR, 0, 0, body_lo])
+    rows.append([isa.HALT, 0, 0, 0, 0])
+    return np.asarray(rows, np.int32)
+
+
+def gen_random_scenario(rng: np.random.Generator) -> Scenario:
+    """A random-program cell on a minimal single-lock layout."""
+    geo = gen_geometry(rng)
+    layout = Layout(n_threads=geo["n_threads"], n_locks=1,
+                    wa_size=geo["wa_size"])
+    prog = gen_random_program(rng, body_len=int(rng.integers(12, 48)),
+                              iters=int(rng.integers(1, 5)))
+    pc, regs = init_state(layout)
+    regs[:, isa.R_AT] = layout.wa_base  # R_AT starts as a valid wa address
+    pc, regs = pad_threads(pc, regs, PAD_THREADS)
+    return Scenario(
+        kind="random", lock=None,
+        program=pad_program(prog),
+        init_pc=pc, init_regs=regs,
+        init_mem=pad_mem(np.zeros(layout.mem_words, np.int32),
+                         PAD_MEM_WORDS),
+        n_active=geo["n_threads"],
+        wa_base=layout.wa_base, wa_size=layout.wa_size,
+        horizon=geo["horizon"], max_events=geo["max_events"],
+        seed=geo["seed"], costs=geo["costs"],
+        meta={"layout": {"n_threads": geo["n_threads"], "n_locks": 1,
+                         "wa_size": geo["wa_size"]}},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Composed lock scenarios
+# ---------------------------------------------------------------------------
+
+def gen_composed_scenario(rng: np.random.Generator,
+                          lock: str | None = None,
+                          **overrides) -> Scenario:
+    """A ``SIM_LOCKS`` program in a randomized occupancy-probed workload.
+
+    ``overrides`` pin any :func:`gen_geometry` field (plus
+    ``count_collisions``) — used by the corpus builder to force rare
+    geometries deterministically.
+    """
+    if lock is None:
+        lock = str(rng.choice(SIM_LOCKS))
+    geo = gen_geometry(rng, lock)
+    count_collisions = (lock in ("twa", "twa-sem")
+                        and bool(rng.integers(0, 2)))
+    if "count_collisions" in overrides:
+        count_collisions = overrides.pop("count_collisions")
+    unknown = set(overrides) - set(geo)
+    assert not unknown, unknown
+    geo.update(overrides)
+    layout = Layout(n_threads=geo["n_threads"], n_locks=geo["n_locks"],
+                    wa_size=geo["wa_size"],
+                    private_arrays=geo["private_arrays"],
+                    long_term_threshold=geo["long_term_threshold"],
+                    sem_permits=geo["sem_permits"],
+                    count_collisions=count_collisions)
+    cs_work = int(rng.integers(0, 7))
+    ncs_max = int(rng.integers(0, 33))
+    if lock == "tkt-dual":
+        # the probe words live in the lgrant sector tkt-dual itself uses
+        prog = build_mutexbench(lock, layout, cs_work=cs_work,
+                                ncs_max=ncs_max)
+        probed = False
+    else:
+        prog = build_occupancy_probe(lock, layout, cs_work=cs_work,
+                                     ncs_max=ncs_max)
+        probed = True
+    pc, regs = init_state(layout)
+    pc, regs = pad_threads(pc, regs, PAD_THREADS)
+    gen_mem = INIT_MEM_GEN.get(lock)
+    init_mem = (gen_mem(layout) if gen_mem
+                else np.zeros(layout.mem_words, np.int32))
+    cap = layout.sem_permits if lock == "twa-sem" else 1
+    return Scenario(
+        kind="composed", lock=lock,
+        program=pad_program(prog),
+        init_pc=pc, init_regs=regs,
+        init_mem=pad_mem(init_mem, PAD_MEM_WORDS),
+        n_active=geo["n_threads"],
+        wa_base=layout.wa_base, wa_size=layout.wa_size,
+        horizon=geo["horizon"], max_events=geo["max_events"],
+        seed=geo["seed"], costs=geo["costs"],
+        meta={
+            "cap": cap, "probed": probed,
+            "count_collisions": count_collisions,
+            "ticket_fifo": lock in TICKET_FIFO_LOCKS,
+            "grant_word": lock in GRANT_WORD_LOCKS,
+            "layout": {"n_threads": geo["n_threads"],
+                       "n_locks": geo["n_locks"],
+                       "wa_size": geo["wa_size"],
+                       "private_arrays": geo["private_arrays"],
+                       "long_term_threshold": geo["long_term_threshold"],
+                       "sem_permits": geo["sem_permits"],
+                       "count_collisions": count_collisions},
+        },
+    )
+
+
+def generate_batch(n_cases: int, seed: int,
+                   composed_fraction: float = 0.6) -> list[Scenario]:
+    """A deterministic mixed batch: ``composed_fraction`` of the cases wrap
+    the ``SIM_LOCKS`` generators round-robin (so any batch of >= 11/0.6
+    cases covers every lock at least once), the rest are random ISA
+    programs."""
+    rng = np.random.default_rng(seed)
+    n_composed = min(n_cases, int(round(n_cases * composed_fraction)))
+    out = []
+    for i in range(n_cases):
+        if i < n_composed:
+            lock = SIM_LOCKS[i % len(SIM_LOCKS)]
+            out.append(gen_composed_scenario(rng, lock))
+        else:
+            out.append(gen_random_scenario(rng))
+    return out

@@ -1,0 +1,159 @@
+"""Engine-independent invariants over oracle runs of composed scenarios.
+
+The differential layer (oracle == engine, bit for bit) catches *divergence*;
+this layer catches bugs both sides could share.  Every check is derived from
+lock semantics, not from engine internals:
+
+  * ``exclusion``    — the occupancy probe's violation word stays 0 per lock
+    (critical-section occupancy never exceeded the cap: 1 for mutexes,
+    ``sem_permits`` for twa-sem) and final occupancy is in ``[0, cap]``.
+  * ``conservation`` — ticket-family counters balance: per lock,
+    ``grant <= sum(acquisitions) <= ticket`` and the in-flight window
+    ``ticket - grant`` never exceeds the thread count.
+  * ``fifo``         — ticket-family mutexes grant in strictly increasing
+    ticket order per lock (from the oracle's ACQ trace).
+  * ``deadlock``     — a composed scenario (infinite-loop workload) must be
+    cut by the horizon or event budget, never reach the "stalled" state
+    where every thread is parked and no store is pending.
+  * ``progress``     — at least one acquisition within the horizon.
+  * ``collision``    — with ``count_collisions``, per-thread futile wakeups
+    never exceed total wakeups.
+
+Each check returns a list of human-readable violation strings (empty = ok).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..isa import LOCK_STRIDE, OFF_GRANT, OFF_TICKET
+from ..programs import Layout, OCC_OFF, VIOL_OFF, read_collision_counters
+from .oracle import Trace
+
+
+def _lock_bases(n_locks: int) -> list[int]:
+    return [lidx * LOCK_STRIDE for lidx in range(n_locks)]
+
+
+def check_exclusion(scenario, mem: np.ndarray) -> list[str]:
+    if not scenario.meta.get("probed"):
+        return []
+    cap = scenario.meta["cap"]
+    problems = []
+    for lidx, base in enumerate(_lock_bases(
+            scenario.meta["layout"]["n_locks"])):
+        viol = int(mem[base + VIOL_OFF])
+        occ = int(mem[base + OCC_OFF])
+        if viol != 0:
+            problems.append(
+                f"exclusion: lock {lidx} occupancy exceeded cap {cap} "
+                f"(violation word = {viol})")
+        if not 0 <= occ <= cap:
+            problems.append(
+                f"exclusion: lock {lidx} final occupancy {occ} outside "
+                f"[0, {cap}]")
+    return problems
+
+
+def check_conservation(scenario, mem: np.ndarray,
+                       stats: dict) -> list[str]:
+    """Ticket-draw / grant / acquisition accounting for the ticket family.
+
+    Every ticket-family lock draws from ``OFF_TICKET``, so ``sum(ticket)``
+    counts draws and each live thread holds at most one undrawn-into-ACQ
+    ticket: ``0 <= sum(ticket) - total_acq <= T``.  Locks that advance the
+    shared ``OFF_GRANT`` word (not partitioned/anderson, whose grants live
+    elsewhere) additionally expose the in-flight window per lock
+    (``0 <= ticket - grant <= T``) and ``sum(grant) <= total_acq`` — a
+    committed grant/release implies a completed acquisition.
+    """
+    if not scenario.meta.get("ticket_fifo") and scenario.lock != "twa-sem":
+        return []
+    n_threads = scenario.meta["layout"]["n_threads"]
+    total_acq = int(np.asarray(stats["acquisitions"]).sum())
+    grant_word = scenario.meta.get("grant_word", False)
+    problems = []
+    tickets = grants = 0
+    for lidx, base in enumerate(_lock_bases(
+            scenario.meta["layout"]["n_locks"])):
+        ticket = int(mem[base + OFF_TICKET])
+        grant = int(mem[base + OFF_GRANT])
+        tickets += ticket
+        grants += grant
+        if grant_word and not 0 <= ticket - grant <= n_threads:
+            problems.append(
+                f"conservation: lock {lidx} in-flight window "
+                f"ticket-grant = {ticket}-{grant} outside [0, {n_threads}]")
+    if not 0 <= tickets - total_acq <= n_threads:
+        problems.append(
+            f"conservation: sum(ticket) {tickets} vs acquisitions "
+            f"{total_acq}: drawn-but-not-entered outside [0, {n_threads}]")
+    if grant_word and grants > total_acq:
+        problems.append(
+            f"conservation: sum(grant) {grants} exceeds acquisitions "
+            f"{total_acq}")
+    return problems
+
+
+def check_fifo(scenario, trace: Trace) -> list[str]:
+    if not scenario.meta.get("ticket_fifo"):
+        return []
+    last: dict[int, int] = {}
+    problems = []
+    for (_ev, _now, thread, lidx, _waited, ticket) in trace.acquires:
+        prev = last.get(lidx)
+        if prev is not None and ticket <= prev:
+            problems.append(
+                f"fifo: lock {lidx} granted ticket {ticket} (thread "
+                f"{thread}) after ticket {prev}")
+        last[lidx] = ticket
+    return problems
+
+
+def check_deadlock(scenario, trace: Trace) -> list[str]:
+    if scenario.kind != "composed":
+        return []  # random programs may legitimately park forever
+    if trace.exit_reason == "stalled":
+        return ["deadlock: every thread parked with no pending store "
+                f"before the horizon (exit={trace.exit_reason})"]
+    return []
+
+
+def check_progress(scenario, stats: dict) -> list[str]:
+    if scenario.kind != "composed":
+        return []
+    if int(np.asarray(stats["acquisitions"]).sum()) < 1:
+        return [f"progress: no acquisition within horizon "
+                f"{scenario.horizon}"]
+    return []
+
+
+def check_collisions(scenario, mem: np.ndarray) -> list[str]:
+    if not scenario.meta.get("count_collisions"):
+        return []
+    layout = Layout(**scenario.meta["layout"])
+    wakes, futile = read_collision_counters(
+        np.asarray(mem)[:layout.mem_words], layout)
+    problems = []
+    bad = futile > wakes
+    if bad.any():
+        t = int(np.argmax(bad))
+        problems.append(
+            f"collision: thread {t} futile wakeups {int(futile[t])} exceed "
+            f"total wakeups {int(wakes[t])}")
+    if (wakes < 0).any() or (futile < 0).any():
+        problems.append("collision: negative wakeup counter")
+    return problems
+
+
+def check_invariants(scenario, stats: dict, trace: Trace) -> list[str]:
+    """All invariant violations for one oracle run (empty list = pass)."""
+    mem = np.asarray(stats["grant_value"])
+    problems = []
+    problems += check_exclusion(scenario, mem)
+    problems += check_conservation(scenario, mem, stats)
+    problems += check_fifo(scenario, trace)
+    problems += check_deadlock(scenario, trace)
+    problems += check_progress(scenario, stats)
+    problems += check_collisions(scenario, mem)
+    return problems

@@ -1,0 +1,300 @@
+"""Differential runner: oracle vs ``run_sweep`` across all three sweep
+modes, invariant checking, greedy shrinking, and the replayable corpus.
+
+A fuzz batch is executed exactly like a figure sweep: every scenario is
+padded to the batch-shared shapes at generation time, so each engine mode
+costs ONE compile + ONE dispatch for the whole batch.  The oracle then
+re-executes each cell sequentially in NumPy and every stat the engine
+returns must match bit for bit.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .. import engine
+from .generate import Scenario
+from .invariants import check_invariants
+from .oracle import Trace, run_oracle
+
+MODES = ("map", "vmap", "sched")
+
+# Stats compared bit-identically between oracle and every engine mode.
+STAT_KEYS = ("acquisitions", "waited_acquisitions", "handover_sum",
+             "handover_count", "events", "sleeping", "grant_value")
+
+
+def run_engine_batch(scenarios: list[Scenario], mode: str) -> list[dict]:
+    """One compiled ``engine.run_sweep`` call over a padded batch."""
+    s0 = scenarios[0]
+    for s in scenarios:
+        assert (s.n_threads, s.mem_words, s.n_locks) == \
+            (s0.n_threads, s0.mem_words, s0.n_locks), "batch not padded"
+    kw = {}
+    if mode == "sched":
+        kw = dict(lanes=engine.DEFAULT_LANES, chunk=engine.DEFAULT_CHUNK)
+    raw = engine.run_sweep(
+        np.stack([s.program for s in scenarios]),
+        mem_words=s0.mem_words, n_locks=s0.n_locks,
+        init_pc=np.stack([s.init_pc for s in scenarios]),
+        init_regs=np.stack([s.init_regs for s in scenarios]),
+        n_active=np.asarray([s.n_active for s in scenarios]),
+        seeds=np.asarray([s.seed for s in scenarios], np.uint32),
+        wa_base=np.asarray([s.wa_base for s in scenarios]),
+        wa_size=np.asarray([s.wa_size for s in scenarios]),
+        horizon=np.asarray([s.horizon for s in scenarios], np.int32),
+        max_events=np.asarray([s.max_events for s in scenarios], np.int32),
+        costs=np.stack([s.costs for s in scenarios]),
+        init_mem=np.stack([s.init_mem for s in scenarios]),
+        mode=mode, **kw)
+    return [{k: raw[k][i] for k in STAT_KEYS}
+            for i in range(len(scenarios))]
+
+
+def run_oracle_case(scenario: Scenario, mutate: tuple = ()) -> tuple[dict,
+                                                                     Trace]:
+    trace = Trace()
+    out = run_oracle(scenario.program, trace=trace, mutate=mutate,
+                     **scenario.engine_kwargs())
+    return out, trace
+
+
+def diff_stats(oracle_out: dict, engine_out: dict, label: str) -> list[str]:
+    """First bit-level mismatch per stat key (empty = identical)."""
+    problems = []
+    for k in STAT_KEYS:
+        a, b = np.asarray(oracle_out[k]), np.asarray(engine_out[k])
+        if not np.array_equal(a, b):
+            if a.ndim:
+                i = int(np.argmax(a != b))
+                detail = f"[{i}]: oracle={a.flat[i]} engine={b.flat[i]}"
+            else:
+                detail = f": oracle={a} engine={b}"
+            problems.append(f"differential[{label}]: {k}{detail}")
+    return problems
+
+
+def check_case(scenario: Scenario, oracle_out: dict, trace: Trace,
+               engine_outs: dict[str, dict]) -> list[str]:
+    """All problems for one case: mode differentials + invariants."""
+    problems = []
+    for mode, out in engine_outs.items():
+        problems += diff_stats(oracle_out, out, mode)
+    problems += check_invariants(scenario, oracle_out, trace)
+    return problems
+
+
+@dataclass
+class FuzzReport:
+    n_cases: int
+    total_events: int = 0
+    failures: list = field(default_factory=list)  # (index, scenario, [msgs])
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def summary(self) -> str:
+        head = (f"fuzz: {self.n_cases} cases, {self.total_events} oracle "
+                f"events, {len(self.failures)} failing")
+        lines = [head]
+        for idx, scenario, msgs in self.failures:
+            tag = scenario.lock or scenario.kind
+            lines.append(f"  case {idx} ({tag}): " + "; ".join(msgs[:3]))
+        return "\n".join(lines)
+
+
+def fuzz(scenarios: list[Scenario], modes: tuple = MODES,
+         oracle_mutate: tuple = ()) -> FuzzReport:
+    """Differential + invariant sweep over a padded scenario batch."""
+    engine_outs = {mode: run_engine_batch(scenarios, mode) for mode in modes}
+    report = FuzzReport(n_cases=len(scenarios))
+    for i, scenario in enumerate(scenarios):
+        oracle_out, trace = run_oracle_case(scenario, mutate=oracle_mutate)
+        report.total_events += int(oracle_out["events"])
+        problems = check_case(scenario, oracle_out, trace,
+                              {m: outs[i] for m, outs in engine_outs.items()})
+        if problems:
+            report.failures.append((i, scenario, problems))
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Shrinking
+# ---------------------------------------------------------------------------
+
+def count_instructions(program: np.ndarray) -> int:
+    """Rows that still do something: neither NOP nor HALT."""
+    ops = np.asarray(program)[:, 0]
+    from ..isa import HALT, NOP
+    return int(((ops != NOP) & (ops != HALT)).sum())
+
+
+def failure_classes(problems: list[str]) -> set:
+    """Collapse problem strings to their class: ``differential``,
+    ``exclusion``, ``conservation``, ``fifo``, ``deadlock``, ``progress``,
+    ``collision``."""
+    return {p.split(":", 1)[0].split("[", 1)[0] for p in problems}
+
+
+def case_problems(scenario: Scenario, modes: tuple = ("map",),
+                  oracle_mutate: tuple = ()) -> list[str]:
+    """All problems for a single case (one engine dispatch per mode).
+
+    A candidate that crashes the oracle (e.g. a shrink step broke program
+    well-formedness) is reported as a ``malformed`` problem so the shrinker
+    can discard it rather than chase it.
+    """
+    try:
+        oracle_out, trace = run_oracle_case(scenario, mutate=oracle_mutate)
+        engine_outs = {m: run_engine_batch([scenario], m)[0] for m in modes}
+        return check_case(scenario, oracle_out, trace, engine_outs)
+    except Exception as e:  # noqa: BLE001 - anything the candidate broke
+        return [f"malformed: {e!r}"]
+
+
+def case_fails(scenario: Scenario, modes: tuple = ("map",),
+               oracle_mutate: tuple = ()) -> bool:
+    problems = case_problems(scenario, modes=modes,
+                             oracle_mutate=oracle_mutate)
+    return bool(problems) and failure_classes(problems) != {"malformed"}
+
+
+def shrink(scenario: Scenario, failing=None, modes: tuple = ("map",),
+           oracle_mutate: tuple = (), program_passes: bool = True) -> Scenario:
+    """Greedy minimization of a failing case.
+
+    The predicate preserves the original FAILURE CLASS: a candidate counts
+    as still-failing only if it reproduces at least one of the original
+    problem classes (shrinking a differential mismatch must not wander off
+    into, say, a horizon-starved ``progress`` violation).
+
+    Passes, each keeping a candidate only if it still fails:
+      1. horizon/max_events halving (cheapest first — shortens every later
+         oracle run);
+      2. dropping threads from the top (``n_active`` reduction);
+      3. replacing program rows with HALT (kills whole suffix behaviour),
+         then with NOP (keeps control flow), to a fixed point.
+
+    ``program_passes=False`` keeps the program untouched (passes 1-2 only)
+    — used for corpus entries whose *program semantics* are the point (a
+    broken lock must stay a recognizable broken lock, not collapse into a
+    two-instruction store to the violation word).
+
+    Shapes are left untouched, so every engine call during a shrink hits the
+    same compiled executable.
+    """
+    from ..isa import HALT, NOP
+    if failing is None:
+        target = failure_classes(case_problems(
+            scenario, modes=modes, oracle_mutate=oracle_mutate))
+        target.discard("malformed")
+        assert target, "shrink() needs a failing scenario"
+
+        def failing(s):
+            got = failure_classes(case_problems(
+                s, modes=modes, oracle_mutate=oracle_mutate))
+            return bool(got & target)
+    assert failing(scenario), "shrink() needs a failing scenario"
+
+    improved = False
+
+    def attempt(cand):
+        nonlocal scenario, improved
+        if failing(cand):
+            scenario = cand
+            improved = True
+            return True
+        return False
+
+    def size():
+        return (count_instructions(scenario.program), scenario.n_active,
+                scenario.horizon)
+
+    while True:
+        before = size()
+        improved = False
+        for _ in range(24):  # 1. horizon / event budget
+            h = scenario.horizon // 2
+            if h < 50 or not attempt(scenario.replace(
+                    horizon=h, max_events=min(scenario.max_events, 4 * h))):
+                break
+        while scenario.n_active > 1:  # 2. threads
+            if not attempt(scenario.replace(n_active=scenario.n_active - 1)):
+                break
+        if not program_passes:
+            if not improved and size() == before:
+                return scenario
+            continue
+        for fill_op in (HALT, NOP):  # 3. program rows (tail-first for HALT)
+            changed = True
+            while changed:
+                changed = False
+                prog = np.asarray(scenario.program)
+                for i in reversed(range(len(prog))):
+                    if prog[i, 0] in (NOP, HALT):
+                        continue
+                    cand_prog = prog.copy()
+                    cand_prog[i] = (fill_op, 0, 0, 0, 0)
+                    if attempt(scenario.replace(program=cand_prog)):
+                        changed = True
+                        prog = np.asarray(scenario.program)
+        # 4. branch short-circuit: a conditional branch becomes JMP (always
+        # taken) so its dead fall-through path can die in the next pass
+        from ..isa import BEQ, BGTI, JMP
+        prog = np.asarray(scenario.program)
+        for i in range(len(prog)):
+            if BEQ <= prog[i, 0] <= BGTI:
+                cand_prog = np.asarray(scenario.program).copy()
+                cand_prog[i] = (JMP, 0, 0, 0, cand_prog[i, 4])
+                attempt(scenario.replace(program=cand_prog))
+        # 5. pair elimination: escape local minima where two rows (e.g. a
+        # branch and its target) are only jointly removable
+        live = [i for i in range(len(np.asarray(scenario.program)))
+                if int(np.asarray(scenario.program)[i, 0]) not in (NOP, HALT)]
+        if len(live) <= 24:
+            for i in live:
+                for j in live:
+                    if j <= i:
+                        continue
+                    cand_prog = np.asarray(scenario.program).copy()
+                    if int(cand_prog[i, 0]) in (NOP, HALT):
+                        continue  # already gone via an earlier kept pair
+                    cand_prog[i] = (NOP, 0, 0, 0, 0)
+                    cand_prog[j] = (NOP, 0, 0, 0, 0)
+                    attempt(scenario.replace(program=cand_prog))
+        # joint fixed point: nothing shrank AND no size-neutral rewrite
+        # (e.g. a pass-4 branch->JMP) happened that could unlock more
+        if not improved and size() == before:
+            return scenario
+
+
+# ---------------------------------------------------------------------------
+# Corpus (.npz) serialization
+# ---------------------------------------------------------------------------
+
+_ARRAY_FIELDS = ("program", "init_pc", "init_regs", "init_mem", "costs")
+_SCALAR_FIELDS = ("n_active", "wa_base", "wa_size", "horizon", "max_events",
+                  "seed", "n_threads", "mem_words", "n_locks")
+
+
+def save_scenario(path, scenario: Scenario, note: str = "") -> None:
+    """Write a replayable corpus entry (arrays + JSON metadata)."""
+    meta = dict(kind=scenario.kind, lock=scenario.lock, note=note,
+                meta=scenario.meta,
+                **{k: int(getattr(scenario, k)) for k in _SCALAR_FIELDS})
+    np.savez_compressed(
+        path, _meta=np.frombuffer(json.dumps(meta).encode(), np.uint8),
+        **{k: np.asarray(getattr(scenario, k)) for k in _ARRAY_FIELDS})
+
+
+def load_scenario(path) -> Scenario:
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["_meta"]).decode())
+        arrays = {k: z[k] for k in _ARRAY_FIELDS}
+    return Scenario(
+        kind=meta["kind"], lock=meta["lock"], meta=meta["meta"],
+        **arrays, **{k: meta[k] for k in _SCALAR_FIELDS})

@@ -74,6 +74,19 @@ from .programs import PROG_LEN, pad_program
 
 INF = np.int32(1 << 29)
 
+# The deterministic event-order contract, shared verbatim with the pure-NumPy
+# reference interpreter (``repro.sim.check.oracle``).  Any change to event
+# selection in :func:`_step` MUST update this string and the oracle together —
+# the differential fuzzer asserts bit-identical stats, so even a tie-break
+# flip is a detectable (and intended-to-be-detected) divergence.
+EVENT_ORDER_CONTRACT = (
+    "one fused argmin over the concatenated [pending-commit times | thread "
+    "times] vector, first-minimum wins: a commit/thread-op tie resolves to "
+    "the commit, ties within a half resolve to the lowest thread index; "
+    "store commits fire at issue_time + store_cost, woken spinners resume "
+    "at wake_time + C_WAKE and re-pay the refill load on re-execution"
+)
+
 
 def bitset_words(n_threads: int) -> int:
     """Words in a packed per-line sharer bitset (32 threads per uint32)."""
@@ -803,6 +816,60 @@ def run_sim(program: np.ndarray, *, n_threads: int, mem_words: int,
     hc = int(res["handover_count"])
     res["avg_handover"] = float(res["handover_sum"]) / hc if hc else float("nan")
     return res
+
+
+@functools.lru_cache(maxsize=1)
+def _jit_step():
+    """One jitted copy of the single-event transition (shape-specialized by
+    jax on first use per shape set) — the debug-stepping entry point."""
+    return jax.jit(_step)
+
+
+def debug_states(program: np.ndarray, *, n_threads: int, mem_words: int,
+                 n_locks: int, init_pc: np.ndarray, init_regs: np.ndarray,
+                 wa_base: int, wa_size: int, horizon: int,
+                 max_events: int = 2_000_000, seed: int = 1,
+                 costs: Costs | np.ndarray = DEFAULT_COSTS,
+                 init_mem: np.ndarray | None = None,
+                 n_active: int | None = None):
+    """Single-cell debug entry: yield the full :class:`SimState` (as numpy)
+    after EVERY event, in the engine's own event order.
+
+    This is the observability hook for the ``sim.check`` subsystem: when the
+    differential fuzzer finds an oracle/engine stat divergence, stepping both
+    sides event by event against :data:`EVENT_ORDER_CONTRACT` pinpoints the
+    first diverging event instead of leaving a whole-run diff.  The loop
+    condition is exactly the compiled driver's (`events < max_events` and the
+    earliest event time below ``horizon``), so the final yielded state equals
+    :func:`run_sim`'s final state bit for bit.
+
+    Costs one XLA compile of the single step per shape set (cached), then one
+    dispatch per event — use small horizons.
+    """
+    assert wa_size & (wa_size - 1) == 0
+    if isinstance(costs, Costs):
+        costs = costs.to_array()
+    if init_mem is None:
+        init_mem = np.zeros(mem_words, np.int32)
+    if n_active is None:
+        n_active = n_threads
+    c = SimConsts(program=jnp.asarray(pad_program(program)),
+                  costs=jnp.asarray(costs, jnp.int32),
+                  wa_base=jnp.int32(wa_base), wa_mask=jnp.int32(wa_size - 1),
+                  wa_size=jnp.int32(wa_size), horizon=jnp.int32(horizon),
+                  max_events=jnp.int32(max_events))
+    s = _initial_state(n_threads, mem_words, n_locks,
+                       jnp.asarray(init_pc), jnp.asarray(init_regs),
+                       jnp.asarray(init_mem), jnp.int32(n_active),
+                       jnp.uint32(seed))
+    step = _jit_step()
+    while True:
+        t_th, t_cm = _event_times(s)
+        if not (int(s.events) < max_events
+                and min(int(t_th), int(t_cm)) < horizon):
+            return
+        s = step(c, s)
+        yield SimState(*(np.asarray(x) for x in s))
 
 
 def _broadcast_cells(x, n_cells: int, dtype) -> np.ndarray:

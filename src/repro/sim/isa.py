@@ -11,6 +11,8 @@ the event count per handover at O(#sharers) instead of O(poll rate).
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import numpy as np
 
 # --- opcodes ---------------------------------------------------------------
@@ -51,6 +53,89 @@ HALT = 33
 SPIN_GE = 34  # proceed when mem[regs[b]+imm] >= regs[a] (semaphore frontier)
 
 N_OPS = 35
+
+
+class OpInfo(NamedTuple):
+    """Static metadata for one opcode — the single source of truth consumed
+    by the random-program generator (``sim.check.generate``) and the NumPy
+    reference interpreter (``sim.check.oracle``).
+
+    Operand roles (one per instruction field):
+      * ``rdst``  — register written by the op
+      * ``rsrc``  — register read by the op
+      * ``raddr`` — register read as a memory-address base (``+ imm`` offset)
+      * ``lidx``  — register read as a lock-table index (must be in range)
+      * ``const`` — the field is used as a raw constant, not a register index
+      * ``""``    — the field is ignored
+    ``imm`` roles: ``"off"`` (address offset), ``"val"`` (ALU constant),
+    ``"target"`` (branch target pc), ``"cost"`` (work cycles), ``"mod"``
+    (PRNG modulus), ``""`` (ignored).
+    """
+
+    name: str
+    a: str = ""
+    b: str = ""
+    c: str = ""
+    imm: str = ""
+    kind: str = "alu"  # alu | mem | rmw | branch | work | spin | lock | halt
+
+
+OPCODES: dict[int, OpInfo] = {
+    NOP: OpInfo("NOP"),
+    LOAD: OpInfo("LOAD", a="rdst", b="raddr", imm="off", kind="mem"),
+    STORE: OpInfo("STORE", a="raddr", b="rsrc", imm="off", kind="mem"),
+    STOREI: OpInfo("STOREI", a="raddr", b="const", imm="off", kind="mem"),
+    FADD: OpInfo("FADD", a="rdst", b="raddr", c="const", imm="off", kind="rmw"),
+    SWAP: OpInfo("SWAP", a="rdst", b="raddr", c="rsrc", imm="off", kind="rmw"),
+    CASZ: OpInfo("CASZ", a="rdst", b="raddr", c="rsrc", imm="off", kind="rmw"),
+    ADDI: OpInfo("ADDI", a="rdst", b="rsrc", imm="val"),
+    MOVI: OpInfo("MOVI", a="rdst", imm="val"),
+    MOV: OpInfo("MOV", a="rdst", b="rsrc"),
+    SUB: OpInfo("SUB", a="rdst", b="rsrc", c="rsrc"),
+    MULI: OpInfo("MULI", a="rdst", b="rsrc", imm="val"),
+    ANDI: OpInfo("ANDI", a="rdst", b="rsrc", imm="val"),
+    HASH: OpInfo("HASH", a="rdst", b="rsrc", c="rsrc"),
+    HASHP: OpInfo("HASHP", a="rdst", b="rsrc", c="rsrc"),
+    BEQ: OpInfo("BEQ", a="rsrc", b="rsrc", imm="target", kind="branch"),
+    BNE: OpInfo("BNE", a="rsrc", b="rsrc", imm="target", kind="branch"),
+    BLE: OpInfo("BLE", a="rsrc", b="rsrc", imm="target", kind="branch"),
+    BGT: OpInfo("BGT", a="rsrc", b="rsrc", imm="target", kind="branch"),
+    BEQI: OpInfo("BEQI", a="rsrc", c="const", imm="target", kind="branch"),
+    BNEI: OpInfo("BNEI", a="rsrc", c="const", imm="target", kind="branch"),
+    BLEI: OpInfo("BLEI", a="rsrc", c="const", imm="target", kind="branch"),
+    BGTI: OpInfo("BGTI", a="rsrc", c="const", imm="target", kind="branch"),
+    JMP: OpInfo("JMP", imm="target", kind="branch"),
+    WORKI: OpInfo("WORKI", imm="cost", kind="work"),
+    WORKR: OpInfo("WORKR", a="rsrc", kind="work"),
+    PRNG: OpInfo("PRNG", a="rdst", imm="mod"),
+    SPIN_EQ: OpInfo("SPIN_EQ", a="rsrc", b="raddr", imm="off", kind="spin"),
+    SPIN_NE: OpInfo("SPIN_NE", a="rsrc", b="raddr", imm="off", kind="spin"),
+    SPIN_EQI: OpInfo("SPIN_EQI", b="raddr", c="const", imm="off", kind="spin"),
+    SPIN_NEI: OpInfo("SPIN_NEI", b="raddr", c="const", imm="off", kind="spin"),
+    SPIN_GE: OpInfo("SPIN_GE", a="rsrc", b="raddr", imm="off", kind="spin"),
+    ACQ: OpInfo("ACQ", a="lidx", c="const", kind="lock"),
+    REL: OpInfo("REL", b="lidx", kind="lock"),
+    HALT: OpInfo("HALT", kind="halt"),
+}
+assert len(OPCODES) == N_OPS and sorted(OPCODES) == list(range(N_OPS))
+
+OP_NAMES = {op: info.name for op, info in OPCODES.items()}
+
+
+def disasm(program: np.ndarray) -> list[str]:
+    """Human-readable listing of a packed ``(n, 5)`` program (debug aid)."""
+    out = []
+    for i, (op, a, b, c, imm) in enumerate(np.asarray(program)):
+        info = OPCODES[int(op)]
+        fields = []
+        for role, val in ((info.a, a), (info.b, b), (info.c, c)):
+            if role:
+                fields.append(f"{'r' if role != 'const' else '#'}{int(val)}")
+        if info.imm:
+            fields.append(f"{info.imm}={int(imm)}")
+        out.append(f"{i:3d}: {info.name:<9s} " + " ".join(fields))
+    return out
+
 
 # --- registers ---------------------------------------------------------------
 R_TID, R_NODE, R_LOCK, R_LIDX = 0, 1, 2, 3

@@ -651,7 +651,18 @@ def read_collision_counters(mem: np.ndarray,
 
     The counters live in each thread's node sector (isa.CC_WAKES/CC_FUTILE);
     the measured §3 collision rate is ``futile.sum() / wakeups.sum()``.
+
+    ``layout`` must be the run's own layout WITH ``count_collisions=True``:
+    without that flag the programs never emit the tally code and the node
+    words hold queue-lock state (MCS/CLH flags, Hemlock grants), so reading
+    them as counters would silently return garbage.
     """
+    if not layout.count_collisions:
+        raise ValueError(
+            "read_collision_counters: layout.count_collisions is False — "
+            "this run never tallied wakeups (the node words hold queue-lock "
+            "state, not counters). Re-run the sweep with "
+            "count_collisions=True and pass the same Layout here.")
     t = layout.n_threads
     nodes = np.asarray(mem)[layout.node_base:
                             layout.node_base + t * MCS_NODE_STRIDE]

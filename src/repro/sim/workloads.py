@@ -46,16 +46,20 @@ class SweepCell:
     costs: Costs
     wa_size: int
     long_term_threshold: int
+    sem_permits: int
 
 
 @dataclass(frozen=True)
 class SweepSpec:
     """Declarative description of a lockVM parameter sweep.
 
-    The first eight fields are *axes*: each accepts a single value or a
+    The first nine fields are *axes*: each accepts a single value or a
     sequence, and :meth:`cells` yields their cartesian product in field
-    order (locks outermost, long_term_threshold innermost).  The remaining
-    fields are scalar knobs shared by every cell.
+    order (locks outermost, sem_permits innermost).  The remaining fields
+    are scalar knobs shared by every cell.  The ``sem_permits`` axis maps
+    the mutex→semaphore continuum: permits=1 is a FIFO mutex, permits→T
+    approaches uncontended entry (only twa-sem consumes it; other locks
+    ignore the value).
     """
 
     locks: tuple | str = ("ticket", "twa", "mcs")
@@ -66,30 +70,31 @@ class SweepSpec:
     costs: tuple | Costs = DEFAULT_COSTS
     wa_size: tuple | int = 4096          # waiting-array slots (pow2, Fig 8)
     long_term_threshold: tuple | int = LT_THRESHOLD  # TWA-family split point
+    sem_permits: tuple | int = 4         # twa-sem capacity (axis)
     ncs_max: int = 200
     cs_rand: tuple | None = None
     n_locks: int = 1
     horizon: int = DEFAULT_HORIZON
     max_events: int = DEFAULT_MAX_EVENTS
-    sem_permits: int = 4                 # twa-sem capacity
     count_collisions: bool = False       # TWA family: tally wakeups (Fig 8)
 
     def cells(self) -> list[SweepCell]:
         return [SweepCell(lock=lk, n_threads=t, seed=s, cs_work=cw,
                           private_arrays=pa, costs=co, wa_size=ws,
-                          long_term_threshold=lt)
-                for lk, t, s, cw, pa, co, ws, lt in itertools.product(
+                          long_term_threshold=lt, sem_permits=sp)
+                for lk, t, s, cw, pa, co, ws, lt, sp in itertools.product(
                     _as_tuple(self.locks), _as_tuple(self.threads),
                     _as_tuple(self.seeds), _as_tuple(self.cs_work),
                     _as_tuple(self.private_arrays), _as_tuple(self.costs),
                     _as_tuple(self.wa_size),
-                    _as_tuple(self.long_term_threshold))]
+                    _as_tuple(self.long_term_threshold),
+                    _as_tuple(self.sem_permits))]
 
     def layout_for(self, cell: SweepCell) -> Layout:
         return Layout(n_threads=cell.n_threads, n_locks=self.n_locks,
                       wa_size=cell.wa_size, private_arrays=cell.private_arrays,
                       long_term_threshold=cell.long_term_threshold,
-                      sem_permits=self.sem_permits,
+                      sem_permits=cell.sem_permits,
                       count_collisions=self.count_collisions)
 
 
@@ -146,6 +151,9 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
             "cs_work": cell.cs_work, "private_arrays": cell.private_arrays,
             "costs": cell.costs, "wa_size": cell.wa_size,
             "long_term_threshold": cell.long_term_threshold,
+            "sem_permits": cell.sem_permits,
+            "layout": layout,  # the run's OWN layout (collision readers
+            #                    must not reconstruct it by hand)
             "acquisitions": raw["acquisitions"][i, :t],
             "waited_acquisitions": raw["waited_acquisitions"][i, :t],
             "handover_sum": raw["handover_sum"][i],
@@ -174,6 +182,7 @@ def sweep_curves(spec: SweepSpec, value: str = "throughput") -> dict:
     assert len(_as_tuple(spec.costs)) == 1
     assert len(_as_tuple(spec.wa_size)) == 1
     assert len(_as_tuple(spec.long_term_threshold)) == 1
+    assert len(_as_tuple(spec.sem_permits)) == 1
     results = run_sweep(spec)
     by_cell = {(r["lock"], r["n_threads"], r["seed"]): r[value]
                for r in results}

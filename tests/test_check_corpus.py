@@ -1,0 +1,48 @@
+"""Replay the checked-in fuzz corpus (tests/corpus/*.npz) as fast tier-1
+regression cases.
+
+Two families, distinguished by the expected-class pin each entry carries:
+  * ``diff_*``: scenarios historically shrunk under an injected oracle
+    mutation (store visibility, lost wakeups, free invalidation).  On the
+    correct engine they must replay with ZERO problems across all three
+    sweep modes — they pin exactly the engine behaviours those mutations
+    would break.
+  * ``inv_*``: deliberately broken lock programs.  The checker must KEEP
+    reporting the recorded invariant classes — they pin the checker's own
+    sensitivity (one historical shrunk case per invariant class:
+    exclusion, conservation, deadlock, collision).
+
+Regenerate with ``python -m repro.sim.check.make_corpus tests/corpus``
+after any intended engine/oracle semantics change.
+"""
+
+import glob
+import os
+
+import pytest
+
+from repro.sim.check import case_problems, failure_classes, load_scenario
+
+CORPUS_DIR = os.path.join(os.path.dirname(__file__), "corpus")
+CORPUS = sorted(glob.glob(os.path.join(CORPUS_DIR, "*.npz")))
+
+
+def test_corpus_is_present_and_covers_all_invariant_classes():
+    assert CORPUS, "tests/corpus is empty — run make_corpus"
+    names = [os.path.basename(p) for p in CORPUS]
+    assert sum(n.startswith("diff_") for n in names) >= 3
+    covered = set()
+    for p in CORPUS:
+        covered |= set(load_scenario(p).meta.get("expect_classes", []))
+    assert {"exclusion", "conservation", "deadlock", "collision"} <= covered
+
+
+@pytest.mark.parametrize("path", CORPUS,
+                         ids=[os.path.splitext(os.path.basename(p))[0]
+                              for p in CORPUS])
+def test_corpus_replay(path):
+    scenario = load_scenario(path)
+    expect = set(scenario.meta.get("expect_classes", []))
+    problems = case_problems(scenario, modes=("map", "vmap", "sched"))
+    got = failure_classes(problems)
+    assert got == expect, (problems[:4], expect)

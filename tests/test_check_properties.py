@@ -1,0 +1,56 @@
+"""Hypothesis-driven properties for the sim.check generators and oracle.
+
+Skipped wholesale when hypothesis is not installed (same policy as the
+other property-test modules); CI installs it via requirements-dev.txt.
+The deterministic fixed-seed coverage lives in test_check_fuzz.py — these
+tests let hypothesis hunt the seed space instead.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.sim.check import case_problems  # noqa: E402
+from repro.sim.check.generate import (gen_composed_scenario,  # noqa: E402
+                                      gen_random_program, gen_random_scenario)
+from repro.sim.isa import HALT, N_OPS, OPCODES  # noqa: E402
+from repro.sim.programs import PROG_LEN, SIM_LOCKS  # noqa: E402
+
+# Engine dispatches dominate; keep example counts small and deadlines off
+# (the first example pays the XLA compile).
+FEW = dict(max_examples=8, deadline=None)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_random_programs_always_well_formed_and_halting(seed):
+    rng = np.random.default_rng(seed)
+    prog = gen_random_program(rng)
+    assert len(prog) <= PROG_LEN
+    assert prog[-1, 0] == HALT
+    for op, _a, _b, _c, imm in prog:
+        assert 0 <= op < N_OPS
+        if OPCODES[int(op)].imm == "target":
+            assert 0 <= imm < len(prog)  # confined to the emitted body
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**FEW)
+def test_random_scenario_oracle_engine_bit_identical(seed):
+    """Any generated random-ISA scenario: oracle == map-mode engine."""
+    scenario = gen_random_scenario(np.random.default_rng(seed))
+    assert case_problems(scenario, modes=("map",)) == []
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       lock=st.sampled_from(SIM_LOCKS))
+@settings(**FEW)
+def test_composed_scenario_differential_and_invariants(seed, lock):
+    """Any generated composed scenario: bit-identical to the engine AND
+    exclusion/conservation/FIFO/deadlock-freedom hold."""
+    scenario = gen_composed_scenario(np.random.default_rng(seed), lock)
+    assert case_problems(scenario, modes=("map",)) == []

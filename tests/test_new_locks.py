@@ -115,8 +115,7 @@ def test_wa_size_axis_reaches_the_program():
                      horizon=150_000)
     rates = {}
     for r in run_sweep(spec):
-        layout = Layout(n_threads=32, n_locks=4, wa_size=r["wa_size"])
-        wakes, futile = read_collision_counters(r["mem"], layout)
+        wakes, futile = read_collision_counters(r["mem"], r["layout"])
         assert wakes.sum() > 0
         rates[r["wa_size"]] = futile.sum() / wakes.sum()
     assert rates[16] > 0.05
@@ -132,8 +131,7 @@ def test_long_term_threshold_axis_reaches_the_program():
                      horizon=150_000)
     wakes = {}
     for r in run_sweep(spec):
-        layout = Layout(n_threads=32, n_locks=1)
-        w, _ = read_collision_counters(r["mem"], layout)
+        w, _ = read_collision_counters(r["mem"], r["layout"])
         wakes[r["long_term_threshold"]] = int(w.sum())
     assert wakes[40] == 0, wakes
     assert wakes[1] > 100, wakes
