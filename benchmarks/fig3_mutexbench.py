@@ -5,10 +5,11 @@ Claims validated (tests/test_sim_paper_claims.py):
   * ticket best at low T, collapses at high T;
   * TWA ≈ ticket at low T, ≥ MCS at high T.
 Also runs the appendix variants (tkt-dual, twa-id, twa-staged, partitioned),
-the queue-lock baselines (anderson, clh, hemlock — Fissile Locks), and the
-waiting-array counting semaphore (twa-sem, permits=4).  The whole figure —
-every registered lock × thread count × seed — is ONE SweepSpec and one
-compiled engine call.
+the queue-lock baselines (anderson, clh, hemlock — Fissile Locks), the
+waiting-array counting semaphore (twa-sem, permits=4), and the PR-5
+compositions (fissile-twa fusion, twa-rw reader-writer at the default 50%
+read mix).  The whole figure — every registered lock × thread count × seed
+— is ONE SweepSpec and one compiled engine call.
 """
 
 from __future__ import annotations

@@ -21,7 +21,7 @@ from repro.sim.check import fuzz, generate_batch
 from .common import emit
 
 CASES = 48
-SMOKE_CASES = 19  # 11/0.6 threshold: every SIM_LOCKS entry composed once
+SMOKE_CASES = 22  # 13/0.6 threshold: every SIM_LOCKS entry composed once
 SEED = 20260731
 
 
@@ -29,7 +29,8 @@ def run(smoke: bool = False) -> dict:
     n_cases = SMOKE_CASES if smoke else CASES
     scenarios = generate_batch(n_cases, SEED)
     t0 = time.time()
-    report = fuzz(scenarios)  # oracle vs map/vmap/sched + invariants
+    # oracle vs map/vmap/sched (randomized lane geometry) + invariants
+    report = fuzz(scenarios, sched_seed=SEED)
     dt = time.time() - t0
     emit("fuzz/cases", n_cases,
          f"composed+random, seed={SEED}, modes=map/vmap/sched")

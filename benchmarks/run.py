@@ -3,8 +3,9 @@ benchmarks.  Prints ``name,value,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,table1] [--smoke]
 
-``--smoke`` asks each suite that supports it (fig8, fig9) for a reduced grid
-— CI runs these per-PR and uploads the CSV as a workflow artifact.
+``--smoke`` asks each suite that supports it (fig8, fig9, fig10) for a
+reduced grid — CI runs these per-PR and uploads the CSV as a workflow
+artifact.
 """
 
 from __future__ import annotations
@@ -25,6 +26,7 @@ SUITES = [
     ("fig7", "benchmarks.fig7_stress_latency"),
     ("fig8", "benchmarks.fig8_collisions"),
     ("fig9", "benchmarks.fig9_cost_grid"),
+    ("fig10", "benchmarks.fig10_rw_scaling"),
     ("fig11", "benchmarks.fig11_locktorture"),
     ("threads", "benchmarks.threads_microbench"),
     ("admission", "benchmarks.framework_admission"),

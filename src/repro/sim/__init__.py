@@ -3,10 +3,11 @@
 from .costs import Costs, DEFAULT_COSTS
 from .engine import EVENT_ORDER_CONTRACT, debug_states, run_sim
 from .programs import (ACQUIRE_GEN, INIT_MEM_GEN, LT_THRESHOLD, Layout,
-                       PROG_LEN, RELEASE_GEN, SIM_LOCKS,
+                       PROG_LEN, RELEASE_GEN, RW_WRITER_W, SIM_LOCKS,
                        build_invalidation_diameter, build_mutexbench,
-                       build_occupancy_probe, init_state, pad_mem,
-                       pad_program, pad_threads, read_collision_counters)
+                       build_occupancy_probe, build_rw_probe, init_state,
+                       pad_mem, pad_program, pad_threads,
+                       read_collision_counters)
 from .workloads import (SweepCell, SweepSpec, fig1_invalidation_diameter,
                         fig2_interlock_interference, median_throughput,
                         mutexbench_curve, pack_engine_cells, run_contention,
@@ -16,7 +17,8 @@ __all__ = [
     "Costs", "DEFAULT_COSTS", "run_sim", "debug_states",
     "EVENT_ORDER_CONTRACT", "Layout", "SIM_LOCKS", "PROG_LEN",
     "LT_THRESHOLD", "build_mutexbench", "build_invalidation_diameter",
-    "build_occupancy_probe", "read_collision_counters", "init_state",
+    "build_occupancy_probe", "build_rw_probe", "RW_WRITER_W",
+    "read_collision_counters", "init_state",
     "pad_program", "pad_threads", "pad_mem",
     "ACQUIRE_GEN", "RELEASE_GEN", "INIT_MEM_GEN",
     "SweepSpec", "SweepCell", "run_sweep", "sweep_curves",

@@ -9,9 +9,11 @@ Three layers:
     scenarios wrapping every ``SIM_LOCKS`` generator in randomized critical
     sections with shared occupancy counters.
   * :mod:`invariants` + :mod:`runner` — oracle vs ``run_sweep`` differential
-    execution (bit-identical stats across ``mode="map"/"vmap"/"sched"``),
-    engine-independent invariants, a greedy shrinker, and a replayable
-    ``.npz`` corpus format.
+    execution (bit-identical stats across ``mode="map"/"vmap"/"sched"``,
+    with per-case randomized sched lane geometry), engine-independent
+    invariants (exclusion incl. the weighted rw probe, wrap-aware
+    conservation/FIFO, per-thread liveness bounds, deadlock, collision),
+    a greedy shrinker, and a replayable ``.npz`` corpus format.
 
 See README.md in this directory for the invariant catalog and the
 reproduce/shrink workflow.
@@ -22,10 +24,11 @@ from .generate import (PAD_LOCKS, PAD_MEM_WORDS, PAD_THREADS, Scenario,
                        gen_random_scenario, generate_batch)
 from .invariants import check_invariants
 from .oracle import ORACLE_MUTATIONS, Trace, run_oracle
-from .runner import (MODES, FuzzReport, case_fails, case_problems,
-                     check_case, count_instructions, failure_classes, fuzz,
-                     load_scenario, run_engine_batch, run_oracle_case,
-                     save_scenario, shrink)
+from .runner import (MODES, SCHED_GEOMETRY_POOL, FuzzReport, case_fails,
+                     case_problems, check_case, count_instructions,
+                     failure_classes, fuzz, load_scenario, run_engine_batch,
+                     run_oracle_case, save_scenario, sched_geometries,
+                     shrink)
 
 __all__ = [
     "Scenario", "gen_geometry", "gen_random_scenario",
@@ -36,4 +39,5 @@ __all__ = [
     "failure_classes", "fuzz", "FuzzReport", "shrink",
     "count_instructions", "run_engine_batch", "run_oracle_case",
     "save_scenario", "load_scenario", "MODES",
+    "sched_geometries", "SCHED_GEOMETRY_POOL",
 ]

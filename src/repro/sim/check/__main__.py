@@ -61,7 +61,8 @@ def main(argv=None) -> int:
     else:
         scenarios = generate_batch(args.cases, seed)
         print(f"generated {len(scenarios)} scenarios (seed={seed})")
-    report = fuzz(scenarios, modes=modes, oracle_mutate=mutate)
+    report = fuzz(scenarios, modes=modes, oracle_mutate=mutate,
+                  sched_seed=seed)
     dt = time.time() - t0
     print(report.summary())
     print(f"elapsed {dt:.1f}s "

@@ -15,11 +15,14 @@ Two scenario families:
 
   * **composed** — every ``SIM_LOCKS`` generator wrapped in a randomized
     critical section touching shared occupancy counters
-    (:func:`repro.sim.programs.build_occupancy_probe`), over random
-    lock/thread/wa_size/permits/threshold/cost geometries.  These carry lock
-    semantics, so the invariant layer can check exclusion/permit caps,
-    conservation, ticket FIFO and deadlock-freedom on top of the
-    oracle-vs-engine differential.
+    (:func:`repro.sim.programs.build_occupancy_probe`; ``twa-rw`` uses the
+    weighted :func:`repro.sim.programs.build_rw_probe` since reader overlap
+    is legal), over random lock/thread/wa_size/permits/threshold/
+    reader-fraction/cost geometries, with one case in four seeding the
+    ticket/grant counters near ``INT32_MAX`` to cross the int32 wrap
+    mid-run.  These carry lock semantics, so the invariant layer can check
+    exclusion/permit caps, conservation, ticket FIFO, liveness and
+    deadlock-freedom on top of the oracle-vs-engine differential.
 
 Every scenario in a batch is padded to the same shapes (``PAD_THREADS``,
 ``PAD_MEM_WORDS``, ``PAD_LOCKS``, ``PROG_LEN``) so one fuzz run costs ONE
@@ -34,9 +37,11 @@ import numpy as np
 
 from .. import isa
 from ..costs import Costs
+from ..isa import LOCK_STRIDE, OFF_GRANT, OFF_LGRANT, OFF_TICKET
 from ..programs import (INIT_MEM_GEN, Layout, PROG_LEN, SIM_LOCKS,
-                        build_mutexbench, build_occupancy_probe, init_state,
-                        pad_mem, pad_program, pad_threads)
+                        build_mutexbench, build_occupancy_probe,
+                        build_rw_probe, init_state, pad_mem, pad_program,
+                        pad_threads)
 
 # Shared padded shapes for a fuzz batch (one engine compile per mode).
 PAD_THREADS = 8
@@ -48,14 +53,25 @@ PAD_MEM_WORDS = max(
 
 # Ticket-family mutexes: ACQ events must observe strictly increasing R_TX
 # per lock (FIFO hand-off).  twa-sem is ticket-based but admits K concurrent
-# owners, so its ACQ order is only K-bounded, not strict.
+# owners, so its ACQ order is only K-bounded, not strict.  twa-rw grants
+# ENTRY in strict ticket order for readers and writers alike (readers then
+# overlap in the CS, but their ACQs are still FIFO).  fissile-twa is
+# deliberately NOT FIFO: the TAS fast path barges.
 TICKET_FIFO_LOCKS = frozenset(
     {"ticket", "twa", "twa-id", "twa-staged", "tkt-dual", "partitioned",
-     "anderson"})
+     "anderson", "twa-rw"})
 # Locks whose releases advance the shared OFF_GRANT word (partitioned uses
-# per-sector grant slots, anderson uses waiting-array flags instead).
+# per-sector grant slots, anderson uses waiting-array flags instead;
+# fissile-twa's inner grant is handled by its own conservation branch).
 GRANT_WORD_LOCKS = frozenset(
-    {"ticket", "twa", "twa-id", "twa-staged", "tkt-dual", "twa-sem"})
+    {"ticket", "twa", "twa-id", "twa-staged", "tkt-dual", "twa-sem",
+     "twa-rw"})
+# Locks whose ticket/grant words can be seeded near INT32_MAX to fuzz the
+# wrap: free-running OFF_TICKET/OFF_GRANT counters with wrap-safe compares
+# (partitioned/anderson derive slot indices from the raw ticket, so their
+# init state is position-dependent and stays at zero).
+WRAP_SEED_LOCKS = GRANT_WORD_LOCKS | {"fissile-twa"}
+INT32_MAX = 2**31 - 1
 
 
 @dataclass(frozen=True)
@@ -118,6 +134,11 @@ def gen_geometry(rng: np.random.Generator, lock: str | None = None) -> dict:
     private_arrays = bool(rng.integers(0, 2))
     if lock == "anderson" and n_locks > 1:
         private_arrays = True  # cross-lock aliasing on bool flags is unsound
+    # one case in four starts its ticket/grant counters a few draws below
+    # INT32_MAX, so the run wraps them mid-flight (only consumed for
+    # WRAP_SEED_LOCKS)
+    ticket_base = (int(INT32_MAX - rng.integers(0, 12))
+                   if rng.integers(0, 4) == 0 else 0)
     return dict(
         n_threads=n_threads,
         n_locks=n_locks,
@@ -125,6 +146,8 @@ def gen_geometry(rng: np.random.Generator, lock: str | None = None) -> dict:
         private_arrays=private_arrays,
         long_term_threshold=int(rng.integers(1, 4)),
         sem_permits=int(rng.integers(1, n_threads + 1)),
+        reader_fraction=int(rng.choice((0, 10, 30, 50, 70, 90, 100))),
+        ticket_base=ticket_base,
         horizon=int(rng.integers(1_500, 4_000)),
         max_events=6_000,
         seed=int(rng.integers(1, 2**31 - 1)),
@@ -298,14 +321,20 @@ def gen_composed_scenario(rng: np.random.Generator,
                     private_arrays=geo["private_arrays"],
                     long_term_threshold=geo["long_term_threshold"],
                     sem_permits=geo["sem_permits"],
+                    reader_fraction=geo["reader_fraction"],
                     count_collisions=count_collisions)
     cs_work = int(rng.integers(0, 7))
     ncs_max = int(rng.integers(0, 33))
+    rw = lock == "twa-rw"
     if lock == "tkt-dual":
         # the probe words live in the lgrant sector tkt-dual itself uses
         prog = build_mutexbench(lock, layout, cs_work=cs_work,
                                 ncs_max=ncs_max)
         probed = False
+    elif rw:
+        # weighted reader/writer probe: overlap among readers is legal
+        prog = build_rw_probe(layout, cs_work=cs_work, ncs_max=ncs_max)
+        probed = True
     else:
         prog = build_occupancy_probe(lock, layout, cs_work=cs_work,
                                      ncs_max=ncs_max)
@@ -315,6 +344,13 @@ def gen_composed_scenario(rng: np.random.Generator,
     gen_mem = INIT_MEM_GEN.get(lock)
     init_mem = (gen_mem(layout) if gen_mem
                 else np.zeros(layout.mem_words, np.int32))
+    ticket_base = geo["ticket_base"] if lock in WRAP_SEED_LOCKS else 0
+    if ticket_base:
+        for base in range(0, geo["n_locks"] * LOCK_STRIDE, LOCK_STRIDE):
+            init_mem[base + OFF_TICKET] = ticket_base
+            init_mem[base + OFF_GRANT] = ticket_base
+            if lock == "tkt-dual":
+                init_mem[base + OFF_LGRANT] = ticket_base
     cap = layout.sem_permits if lock == "twa-sem" else 1
     return Scenario(
         kind="composed", lock=lock,
@@ -326,16 +362,19 @@ def gen_composed_scenario(rng: np.random.Generator,
         horizon=geo["horizon"], max_events=geo["max_events"],
         seed=geo["seed"], costs=geo["costs"],
         meta={
-            "cap": cap, "probed": probed,
+            "cap": cap, "probed": probed, "rw": rw,
+            "fissile": lock == "fissile-twa",
             "count_collisions": count_collisions,
             "ticket_fifo": lock in TICKET_FIFO_LOCKS,
             "grant_word": lock in GRANT_WORD_LOCKS,
+            "ticket_base": ticket_base,
             "layout": {"n_threads": geo["n_threads"],
                        "n_locks": geo["n_locks"],
                        "wa_size": geo["wa_size"],
                        "private_arrays": geo["private_arrays"],
                        "long_term_threshold": geo["long_term_threshold"],
                        "sem_permits": geo["sem_permits"],
+                       "reader_fraction": geo["reader_fraction"],
                        "count_collisions": count_collisions},
         },
     )
@@ -344,8 +383,8 @@ def gen_composed_scenario(rng: np.random.Generator,
 def generate_batch(n_cases: int, seed: int,
                    composed_fraction: float = 0.6) -> list[Scenario]:
     """A deterministic mixed batch: ``composed_fraction`` of the cases wrap
-    the ``SIM_LOCKS`` generators round-robin (so any batch of >= 11/0.6
-    cases covers every lock at least once), the rest are random ISA
+    the ``SIM_LOCKS`` generators round-robin (so any batch of >= 13/0.6 =
+    22 cases covers every lock at least once), the rest are random ISA
     programs."""
     rng = np.random.default_rng(seed)
     n_composed = min(n_cases, int(round(n_cases * composed_fraction)))

@@ -7,11 +7,25 @@ lock semantics, not from engine internals:
   * ``exclusion``    — the occupancy probe's violation word stays 0 per lock
     (critical-section occupancy never exceeded the cap: 1 for mutexes,
     ``sem_permits`` for twa-sem) and final occupancy is in ``[0, cap]``.
+    For ``twa-rw`` the weighted rw probe applies instead: readers may
+    overlap each other, but never a writer, and a writer is always alone.
   * ``conservation`` — ticket-family counters balance: per lock,
     ``grant <= sum(acquisitions) <= ticket`` and the in-flight window
-    ``ticket - grant`` never exceeds the thread count.
+    ``ticket - grant`` never exceeds the thread count.  All differences are
+    taken in int32 wrap arithmetic against the scenario's OWN initial
+    memory, so tickets seeded near ``INT32_MAX`` account correctly across
+    the wrap.  ``fissile-twa`` draws tickets only on its slow path, so its
+    draws balance against WAITED acquisitions instead.
   * ``fifo``         — ticket-family mutexes grant in strictly increasing
-    ticket order per lock (from the oracle's ACQ trace).
+    ticket order per lock (from the oracle's ACQ trace; "increasing" is the
+    wrapped difference, so the order survives the int32 wrap).
+  * ``liveness``     — under FIFO locks, a thread that has drawn a ticket
+    is granted within a bounded number of subsequent handovers on that lock
+    (at most ``n_threads`` can be ahead of it).  This catches
+    starving-but-not-deadlocked locks — e.g. a release that occasionally
+    skips a grant strands ONE waiter while everyone else keeps cycling,
+    which ``deadlock``/``progress`` never notice.  Ticket draws come from
+    the oracle's FADD trace (``Trace.fadds``).
   * ``deadlock``     — a composed scenario (infinite-loop workload) must be
     cut by the horizon or event budget, never reach the "stalled" state
     where every thread is parked and no store is pending.
@@ -24,11 +38,14 @@ Each check returns a list of human-readable violation strings (empty = ok).
 
 from __future__ import annotations
 
+from bisect import bisect_right
+
 import numpy as np
 
 from ..isa import LOCK_STRIDE, OFF_GRANT, OFF_TICKET
-from ..programs import Layout, OCC_OFF, VIOL_OFF, read_collision_counters
-from .oracle import Trace
+from ..programs import (Layout, OCC_OFF, RW_WRITER_W, VIOL_OFF,
+                        read_collision_counters)
+from .oracle import Trace, _w32
 
 
 def _lock_bases(n_locks: int) -> list[int]:
@@ -39,11 +56,27 @@ def check_exclusion(scenario, mem: np.ndarray) -> list[str]:
     if not scenario.meta.get("probed"):
         return []
     cap = scenario.meta["cap"]
+    rw = scenario.meta.get("rw", False)
+    n_threads = scenario.meta["layout"]["n_threads"]
     problems = []
     for lidx, base in enumerate(_lock_bases(
             scenario.meta["layout"]["n_locks"])):
         viol = int(mem[base + VIOL_OFF])
         occ = int(mem[base + OCC_OFF])
+        if rw:
+            # weighted probe: readers weigh 1, a writer RW_WRITER_W.  The
+            # violation word convicts any overlap involving a writer; the
+            # final snapshot must be readers-only (<= T) or a lone writer.
+            if viol != 0:
+                problems.append(
+                    f"exclusion: lock {lidx} rw overlap involving a writer "
+                    f"(violation word = {viol})")
+            if not (0 <= occ <= n_threads or occ == RW_WRITER_W):
+                problems.append(
+                    f"exclusion: lock {lidx} final rw occupancy {occ} is "
+                    f"neither readers-only (<= {n_threads}) nor a lone "
+                    f"writer ({RW_WRITER_W})")
+            continue
         if viol != 0:
             problems.append(
                 f"exclusion: lock {lidx} occupancy exceeded cap {cap} "
@@ -59,39 +92,52 @@ def check_conservation(scenario, mem: np.ndarray,
                        stats: dict) -> list[str]:
     """Ticket-draw / grant / acquisition accounting for the ticket family.
 
-    Every ticket-family lock draws from ``OFF_TICKET``, so ``sum(ticket)``
-    counts draws and each live thread holds at most one undrawn-into-ACQ
-    ticket: ``0 <= sum(ticket) - total_acq <= T``.  Locks that advance the
-    shared ``OFF_GRANT`` word (not partitioned/anderson, whose grants live
+    Draws and grants are wrapped int32 differences against the scenario's
+    initial memory (tickets may be seeded near ``INT32_MAX``), so the
+    accounting holds across the wrap.  Every ticket-family lock draws from
+    ``OFF_TICKET`` and each live thread holds at most one undrawn-into-ACQ
+    ticket: ``0 <= draws - total_acq <= T``.  Locks that advance the shared
+    ``OFF_GRANT`` word (not partitioned/anderson, whose grants live
     elsewhere) additionally expose the in-flight window per lock
-    (``0 <= ticket - grant <= T``) and ``sum(grant) <= total_acq`` — a
+    (``0 <= ticket - grant <= T``) and ``grants <= total_acq`` — a
     committed grant/release implies a completed acquisition.
+    ``fissile-twa`` draws only on the slow path, so its draws balance
+    against *waited* acquisitions (every TAS-fast acquisition is
+    ticketless) and its inner grant advances once per slow release.
     """
-    if not scenario.meta.get("ticket_fifo") and scenario.lock != "twa-sem":
+    fissile = scenario.meta.get("fissile", False)
+    if (not scenario.meta.get("ticket_fifo") and scenario.lock != "twa-sem"
+            and not fissile):
         return []
+    init_mem = np.asarray(scenario.init_mem)
     n_threads = scenario.meta["layout"]["n_threads"]
     total_acq = int(np.asarray(stats["acquisitions"]).sum())
-    grant_word = scenario.meta.get("grant_word", False)
+    waited_acq = int(np.asarray(stats["waited_acquisitions"]).sum())
+    grant_word = scenario.meta.get("grant_word", False) or fissile
     problems = []
-    tickets = grants = 0
+    draws = grants = 0
     for lidx, base in enumerate(_lock_bases(
             scenario.meta["layout"]["n_locks"])):
-        ticket = int(mem[base + OFF_TICKET])
-        grant = int(mem[base + OFF_GRANT])
-        tickets += ticket
-        grants += grant
-        if grant_word and not 0 <= ticket - grant <= n_threads:
+        draws_l = _w32(int(mem[base + OFF_TICKET])
+                       - int(init_mem[base + OFF_TICKET]))
+        grants_l = _w32(int(mem[base + OFF_GRANT])
+                        - int(init_mem[base + OFF_GRANT]))
+        draws += draws_l
+        grants += grants_l
+        if grant_word and not 0 <= draws_l - grants_l <= n_threads:
             problems.append(
                 f"conservation: lock {lidx} in-flight window "
-                f"ticket-grant = {ticket}-{grant} outside [0, {n_threads}]")
-    if not 0 <= tickets - total_acq <= n_threads:
+                f"ticket-grant = {draws_l}-{grants_l} outside "
+                f"[0, {n_threads}]")
+    entered = waited_acq if fissile else total_acq
+    what = "waited acquisitions" if fissile else "acquisitions"
+    if not 0 <= draws - entered <= n_threads:
         problems.append(
-            f"conservation: sum(ticket) {tickets} vs acquisitions "
-            f"{total_acq}: drawn-but-not-entered outside [0, {n_threads}]")
-    if grant_word and grants > total_acq:
+            f"conservation: ticket draws {draws} vs {what} {entered}: "
+            f"drawn-but-not-entered outside [0, {n_threads}]")
+    if grant_word and grants > entered:
         problems.append(
-            f"conservation: sum(grant) {grants} exceeds acquisitions "
-            f"{total_acq}")
+            f"conservation: grants {grants} exceed {what} {entered}")
     return problems
 
 
@@ -102,11 +148,58 @@ def check_fifo(scenario, trace: Trace) -> list[str]:
     problems = []
     for (_ev, _now, thread, lidx, _waited, ticket) in trace.acquires:
         prev = last.get(lidx)
-        if prev is not None and ticket <= prev:
+        # wrapped comparison: ticket order survives the int32 wrap
+        if prev is not None and _w32(ticket - prev) <= 0:
             problems.append(
                 f"fifo: lock {lidx} granted ticket {ticket} (thread "
                 f"{thread}) after ticket {prev}")
         last[lidx] = ticket
+    return problems
+
+
+def check_liveness(scenario, trace: Trace) -> list[str]:
+    """Bounded handovers between a ticket draw and that thread's grant.
+
+    Under a FIFO lock at most ``n_threads - 1`` waiters can be ahead of a
+    freshly drawn ticket, so more than ``n_threads`` subsequent
+    acquisitions on the same lock without the drawer being granted means
+    it is being starved (skipped grant, lost wakeup, barging bug) even
+    though the system as a whole keeps making progress.
+    """
+    if not scenario.meta.get("ticket_fifo"):
+        return []
+    layout = scenario.meta["layout"]
+    n_locks, n_threads = layout["n_locks"], layout["n_threads"]
+    bound = n_threads
+    # per-lock ACQ sequence (trace order == event order)
+    acqs: dict[int, list] = {l: [] for l in range(n_locks)}
+    for (ev, _now, thread, lidx, _waited, _tk) in trace.acquires:
+        if lidx in acqs:
+            acqs[lidx].append((ev, thread))
+    problems = []
+    for (ev, _now, t, addr, _old) in trace.fadds:
+        if addr % LOCK_STRIDE != OFF_TICKET:
+            continue
+        lidx = addr // LOCK_STRIDE
+        if not 0 <= lidx < n_locks:
+            continue
+        intervening = 0
+        # events are strictly increasing, so bisect to the first ACQ after
+        # the draw and stop counting one past the bound — each draw costs
+        # O(log A + n_threads), not a full rescan
+        start = bisect_right(acqs[lidx], (ev, float("inf")))
+        for (_aev, athread) in acqs[lidx][start:]:
+            if athread == t:
+                break
+            intervening += 1
+            if intervening > bound:
+                problems.append(
+                    f"liveness: thread {t} drew a ticket on lock {lidx} "
+                    f"at event {ev} and watched more than {bound} other "
+                    f"grants go by without being granted")
+                break
+        if problems:
+            break  # one witness per run is enough
     return problems
 
 
@@ -153,6 +246,7 @@ def check_invariants(scenario, stats: dict, trace: Trace) -> list[str]:
     problems += check_exclusion(scenario, mem)
     problems += check_conservation(scenario, mem, stats)
     problems += check_fifo(scenario, trace)
+    problems += check_liveness(scenario, trace)
     problems += check_deadlock(scenario, trace)
     problems += check_progress(scenario, stats)
     problems += check_collisions(scenario, mem)

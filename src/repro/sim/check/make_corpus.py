@@ -14,8 +14,14 @@ must report for it (``meta["expect_classes"]``), replayed by
     is no longer a semantically meaningful lock.
   * ``inv_*`` — deliberately broken lock programs (double-granting
     releases, double-drawn tickets, skipped grants, a dropped wakeup
-    tally).  The checker must KEEP flagging them with the recorded
-    invariant classes — these pin the checker's own sensitivity.
+    tally, a probabilistically grant-skipping starver).  The checker must
+    KEEP flagging them with the recorded invariant classes — these pin the
+    checker's own sensitivity.
+  * ``wrap_*`` — composed scenarios whose ticket/grant counters start a
+    couple of draws below ``INT32_MAX`` and wrap mid-run.  They must
+    replay with ZERO problems across all three sweep modes — these pin the
+    wrap-safe ``SPIN_GE`` frontier compare and the wrap-aware
+    conservation/FIFO accounting.
 
 Regeneration is deterministic (fixed seeds); rerun after any intended
 engine/oracle semantics change and commit the diff.
@@ -29,10 +35,56 @@ import sys
 import numpy as np
 
 from .. import isa
-from .generate import gen_composed_scenario, generate_batch
+from ..programs import (Asm, Layout, WORK_SCALE, gen_ticket_acquire,
+                        pad_program)
+from .generate import (INT32_MAX, gen_composed_scenario, generate_batch)
 from .runner import case_problems, failure_classes, save_scenario, shrink
 
 SEED = 20260731
+
+
+def build_starving_ticket(layout: Layout, *, cs_work: int = 1,
+                          ncs_max: int = 4, skip_mod: int = 8) -> np.ndarray:
+    """A ticket lock whose release occasionally (1 in ``skip_mod``) writes
+    ``grant = tx + 2``, stranding the waiter holding ticket ``tx + 1`` on
+    its exact-equality spin while every other thread keeps cycling.
+
+    This is the starving-but-NOT-deadlocked shape the liveness bound
+    exists for: the run keeps making global progress (``progress`` and
+    ``deadlock`` both pass until nearly every thread has been stranded),
+    but the first victim watches unboundedly many grants go by after its
+    draw — exactly what ``check_liveness`` convicts.
+    """
+    asm = Asm()
+    asm.label("top")
+    gen_ticket_acquire(asm, "a")
+    if cs_work:
+        asm.emit(isa.WORKI, 0, 0, 0, cs_work * WORK_SCALE)
+    asm.emit(isa.PRNG, isa.R_T1, 0, 0, skip_mod)
+    asm.emit(isa.ADDI, isa.R_K, isa.R_TX, 0, 1)
+    asm.emit(isa.BGTI, isa.R_T1, 0, 0, "nskip")
+    asm.emit(isa.ADDI, isa.R_K, isa.R_TX, 0, 2)   # skip: strand tx + 1
+    asm.label("nskip")
+    asm.emit(isa.REL, 0, isa.R_LIDX, 0, 0)
+    asm.emit(isa.STORE, isa.R_LOCK, isa.R_K, 0, isa.OFF_GRANT)
+    if ncs_max:
+        asm.emit(isa.PRNG, isa.R_W, 0, 0, ncs_max)
+        asm.emit(isa.MULI, isa.R_W, isa.R_W, 0, WORK_SCALE)
+        asm.emit(isa.WORKR, isa.R_W, 0, 0, 0)
+    asm.emit(isa.JMP, 0, 0, 0, "top")
+    return asm.finish()
+
+
+def starving_ticket_scenario(rng, skip_mod: int = 8):
+    """A composed-scenario wrapper around :func:`build_starving_ticket`
+    (shared by the corpus builder and the checker self-tests)."""
+    s = gen_composed_scenario(rng, "ticket", n_threads=8, n_locks=1,
+                              ticket_base=0, horizon=8_000)
+    layout = Layout(**s.meta["layout"])
+    prog = build_starving_ticket(layout, skip_mod=skip_mod)
+    # the probe program was replaced, so drop the probe expectation
+    return s.replace(program=pad_program(prog),
+                     meta={**s.meta, "probed": False})
 
 
 def _first_failing(scenarios, mutate):
@@ -162,6 +214,53 @@ def make_invariant_entries(out_dir):
     yield from _finish(out_dir, "inv_collision_untallied_wakes", s,
                        want={"collision"})
 
+    # liveness: a probabilistically grant-skipping ticket lock strands one
+    # waiter at a time while the rest keep cycling — starving but NOT
+    # deadlocked, the case the liveness bound exists for
+    for _ in range(60):
+        s = starving_ticket_scenario(rng)
+        if "liveness" in failure_classes(case_problems(s, modes=("map",))):
+            break
+    else:  # pragma: no cover - deterministic seed finds one quickly
+        raise AssertionError("no starving-ticket geometry convicted")
+    yield from _finish(out_dir, "inv_liveness_skipped_waiter", s,
+                       want={"liveness"})
+
+
+def make_wrap_entries(out_dir):
+    """Near-wrap scenarios (tickets seeded just below ``INT32_MAX``) that
+    must replay CLEAN — the regression pin for wrap-safe ``SPIN_GE`` and
+    the wrap-aware conservation/FIFO/liveness accounting.  ``twa-sem`` is
+    the ``SPIN_GE`` user; plain ``ticket`` pins the equality-spin family.
+    """
+    rng = np.random.default_rng(SEED + 1)
+    for lock in ("ticket", "twa-sem"):
+        for _ in range(40):
+            s = gen_composed_scenario(rng, lock,
+                                      ticket_base=INT32_MAX - 2,
+                                      n_locks=1)
+            probs = case_problems(s, modes=("map", "vmap", "sched"))
+            ticket = int(np.asarray(
+                run_oracle_mem(s)[isa.OFF_TICKET]))
+            # keep a case that actually CROSSED the wrap and stayed clean
+            if not probs and ticket < 0:
+                break
+        else:  # pragma: no cover - deterministic seed finds one quickly
+            raise AssertionError(f"no clean wrapping {lock} case found")
+        s = s.replace(meta={**s.meta, "expect_classes": []})
+        name = f"wrap_{lock.replace('-', '_')}_near_int32max"
+        save_scenario(os.path.join(out_dir, f"{name}.npz"), s,
+                      note="tickets seeded at INT32_MAX-2; must wrap "
+                           "mid-run and replay with zero problems")
+        yield name, s
+
+
+def run_oracle_mem(scenario):
+    from .oracle import run_oracle
+    return np.asarray(
+        run_oracle(scenario.program,
+                   **scenario.engine_kwargs())["grant_value"])
+
 
 def _finish(out_dir, name, scenario, want):
     probs = case_problems(scenario, modes=("map",))
@@ -183,7 +282,8 @@ def main(out_dir="tests/corpus"):
     os.makedirs(out_dir, exist_ok=True)
     from .runner import count_instructions
     for name, s in (*make_diff_entries(out_dir),
-                    *make_invariant_entries(out_dir)):
+                    *make_invariant_entries(out_dir),
+                    *make_wrap_entries(out_dir)):
         print(f"{name}: {count_instructions(s.program)} instrs, "
               f"{s.n_active} threads, horizon {s.horizon}, "
               f"expect={s.meta['expect_classes']}")

@@ -50,6 +50,10 @@ class Trace:
 
     # (event_index, time, thread, lock_idx, waited, ticket_reg) per ACQ
     acquires: list = field(default_factory=list)
+    # (event_index, time, thread, addr, old_value) per FADD — the liveness
+    # checker reads ticket DRAWS (FADDs on a lock's OFF_TICKET word) out of
+    # this; the compiled engine cannot observe when a thread joined a queue
+    fadds: list = field(default_factory=list)
     # exit reason: "horizon", "max_events", "stalled" (nothing can ever
     # happen again AND at least one thread is parked on a spin — a genuine
     # lost-wakeup/deadlock state), or "halted" (every thread ran to HALT)
@@ -239,6 +243,8 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
             sharers[ln] = {t}
             dirty[ln] = t
             wake_watchers(addr, _w32(now + cost))
+            if trace is not None and op == isa.FADD:
+                trace.fadds.append((events, now, t, addr, old))
         elif op == isa.ADDI:
             _wr(R, a, _w32(rb + imm))
         elif op == isa.MOVI:
@@ -280,7 +286,9 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
             val = mem[addr]
             proceed = {isa.SPIN_EQ: val == ra, isa.SPIN_NE: val != ra,
                        isa.SPIN_EQI: val == c_, isa.SPIN_NEI: val != c_,
-                       isa.SPIN_GE: val >= ra}[op]
+                       # wrap-safe frontier compare (sign of the int32
+                       # difference), mirroring engine.h_spin_ge
+                       isa.SPIN_GE: _w32(val - ra) >= 0}[op]
             sharers[ln].add(t)
             if not proceed:
                 new_pc = pc[t]

@@ -26,16 +26,75 @@ MODES = ("map", "vmap", "sched")
 STAT_KEYS = ("acquisitions", "waited_acquisitions", "handover_sum",
              "handover_count", "events", "sleeping", "grant_value")
 
+# Scheduler-geometry pool for fuzz batches.  The differential must exercise
+# the lane scheduler itself, not just the default 4×512 point: chunk=1
+# (refill check after every single step), a lone lane, lane counts above
+# typical sub-batch sizes (the B < lanes clamp), and the CPU default.
+SCHED_GEOMETRY_POOL = ((1, 1), (2, 64), (3, 1), (6, 128),
+                       (engine.DEFAULT_LANES, engine.DEFAULT_CHUNK))
 
-def run_engine_batch(scenarios: list[Scenario], mode: str) -> list[dict]:
-    """One compiled ``engine.run_sweep`` call over a padded batch."""
+
+def sched_geometries(n_cases: int, seed: int) -> list[tuple[int, int]]:
+    """Deterministic per-case ``(lanes, chunk)`` draws for a fuzz batch.
+
+    Cases sharing a geometry are dispatched together, so a batch costs at
+    most ``len(SCHED_GEOMETRY_POOL)`` sched compiles instead of one — the
+    price of actually fuzzing the scheduler.  Results are geometry-
+    independent by construction; any difference IS the bug being hunted.
+    """
+    rng = np.random.default_rng(np.uint32(seed) ^ np.uint32(0x5C4ED))
+    picks = rng.integers(0, len(SCHED_GEOMETRY_POOL), n_cases)
+    return [SCHED_GEOMETRY_POOL[int(i)] for i in picks]
+
+
+def stamp_sched_geometry(scenarios: list[Scenario],
+                         sched_seed: int) -> list[Scenario]:
+    """Pin each scenario's drawn ``(lanes, chunk)`` into its meta.
+
+    The draw otherwise depends on batch length, case index and seed, so a
+    geometry-dependent failure would be unreproducible from its own
+    artifact: the shrinker and ``--replay`` run single-case batches whose
+    position-0 draw differs from the failing one.  A scenario that already
+    carries a geometry (a replayed artifact) keeps it.
+    """
+    geoms = sched_geometries(len(scenarios), sched_seed)
+    return [s if s.meta.get("sched_geometry") is not None
+            else s.replace(meta={**s.meta, "sched_geometry": list(g)})
+            for s, g in zip(scenarios, geoms)]
+
+
+def run_engine_batch(scenarios: list[Scenario], mode: str,
+                     sched_seed: int = 0) -> list[dict]:
+    """One compiled ``engine.run_sweep`` call over a padded batch.
+
+    ``mode="sched"`` runs each case at its pinned ``meta["sched_geometry"]``
+    (falling back to a fresh :func:`sched_geometries` draw seeded by
+    ``sched_seed``) and dispatches one sub-batch per distinct geometry,
+    reassembling results in input order.
+    """
     s0 = scenarios[0]
     for s in scenarios:
         assert (s.n_threads, s.mem_words, s.n_locks) == \
             (s0.n_threads, s0.mem_words, s0.n_locks), "batch not padded"
-    kw = {}
     if mode == "sched":
-        kw = dict(lanes=engine.DEFAULT_LANES, chunk=engine.DEFAULT_CHUNK)
+        draws = sched_geometries(len(scenarios), sched_seed)
+        geoms = [tuple(s.meta["sched_geometry"])
+                 if s.meta.get("sched_geometry") is not None else g
+                 for s, g in zip(scenarios, draws)]
+        out: list = [None] * len(scenarios)
+        for geom in sorted(set(geoms)):
+            idxs = [i for i, g in enumerate(geoms) if g == geom]
+            sub = _dispatch_batch([scenarios[i] for i in idxs], mode,
+                                  lanes=geom[0], chunk=geom[1])
+            for i, res in zip(idxs, sub):
+                out[i] = res
+        return out
+    return _dispatch_batch(scenarios, mode)
+
+
+def _dispatch_batch(scenarios: list[Scenario], mode: str,
+                    **kw) -> list[dict]:
+    s0 = scenarios[0]
     raw = engine.run_sweep(
         np.stack([s.program for s in scenarios]),
         mem_words=s0.mem_words, n_locks=s0.n_locks,
@@ -108,9 +167,19 @@ class FuzzReport:
 
 
 def fuzz(scenarios: list[Scenario], modes: tuple = MODES,
-         oracle_mutate: tuple = ()) -> FuzzReport:
-    """Differential + invariant sweep over a padded scenario batch."""
-    engine_outs = {mode: run_engine_batch(scenarios, mode) for mode in modes}
+         oracle_mutate: tuple = (), sched_seed: int = 0) -> FuzzReport:
+    """Differential + invariant sweep over a padded scenario batch.
+
+    ``sched_seed`` seeds the per-case scheduler-geometry draws of the
+    ``"sched"`` mode.  The drawn geometry is stamped into each scenario's
+    meta up front, so a failing case's artifact — and every shrink
+    candidate derived from it — replays at exactly the lane placement
+    that failed.
+    """
+    scenarios = stamp_sched_geometry(scenarios, sched_seed)
+    engine_outs = {mode: run_engine_batch(scenarios, mode,
+                                          sched_seed=sched_seed)
+                   for mode in modes}
     report = FuzzReport(n_cases=len(scenarios))
     for i, scenario in enumerate(scenarios):
         oracle_out, trace = run_oracle_case(scenario, mutate=oracle_mutate)
@@ -135,8 +204,8 @@ def count_instructions(program: np.ndarray) -> int:
 
 def failure_classes(problems: list[str]) -> set:
     """Collapse problem strings to their class: ``differential``,
-    ``exclusion``, ``conservation``, ``fifo``, ``deadlock``, ``progress``,
-    ``collision``."""
+    ``exclusion``, ``conservation``, ``fifo``, ``liveness``, ``deadlock``,
+    ``progress``, ``collision``."""
     return {p.split(":", 1)[0].split("[", 1)[0] for p in problems}
 
 

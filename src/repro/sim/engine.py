@@ -373,8 +373,13 @@ def _step(c: SimConsts, s: SimState) -> SimState:
         return _spin(mem[addr] != cc, addr)
 
     def h_spin_ge():
+        # Wrap-safe frontier compare: the sign of the int32 DIFFERENCE, not
+        # a direct >=.  Tickets/grants are free-running int32 counters, so
+        # once they cross INT32_MAX the grant is a huge negative while a
+        # pre-wrap ticket frontier is a huge positive — `mem >= ra` would
+        # park the waiter forever even though the frontier has passed it.
         addr = rb + imm
-        return _spin(mem[addr] >= ra, addr)
+        return _spin(mem[addr] - ra >= 0, addr)
 
     def h_acq():
         lidx = ra

@@ -50,7 +50,9 @@ SPIN_NEI = 30 # proceed when mem[regs[b]+imm]!=c
 ACQ = 31      # lock acquired; a=lockidx reg, c=1 if this acquisition waited
 REL = 32      # about to hand over; b=lockidx reg (timestamps handover)
 HALT = 33
-SPIN_GE = 34  # proceed when mem[regs[b]+imm] >= regs[a] (semaphore frontier)
+SPIN_GE = 34  # proceed when mem[regs[b]+imm] - regs[a] >= 0 in int32 wrap
+#               arithmetic (semaphore/frontier compare; a direct >= would
+#               deadlock when tickets wrap past INT32_MAX)
 
 N_OPS = 35
 
@@ -154,6 +156,9 @@ OFF_GRANT = 16
 OFF_LGRANT = 32      # TKT-Dual long-term grant (own sector)
 OFF_TAIL = 48        # MCS tail pointer
 OFF_PGRANTS = 64     # partitioned ticket: 16 grant slots, one per sector
+OFF_RD = OFF_PGRANTS  # twa-rw reader count (one algorithm per program, so
+#                       the pgrant sector is free — same trick as the CLH
+#                       sentinel)
 LOCK_STRIDE = 64 + 16 * WORDS_PER_SECTOR  # 320 words = 20 sectors
 
 MCS_FLAG = 0         # queue-node: flag sector ...

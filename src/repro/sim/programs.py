@@ -16,11 +16,12 @@ import numpy as np
 from .isa import (ACQ, ADDI, ANDI, Asm, BEQ, BEQI, BGTI, BLEI, BNEI, CASZ,
                   CC_FUTILE, CC_WAKES, FADD, HALT, HASH, HASHP, JMP, LOAD,
                   MCS_FLAG, MCS_NEXT, MCS_NODE_STRIDE, LOCK_STRIDE, MOV, MOVI,
-                  MULI, N_REGS, OFF_GRANT, OFF_LGRANT, OFF_PGRANTS, OFF_TAIL,
-                  OFF_TICKET, PRNG, REL, R_AT, R_DX, R_G, R_K, R_LIDX, R_LOCK,
-                  R_NODE, R_NX, R_T1, R_T2, R_TID, R_TX, R_U, R_V, R_W, R_Z,
-                  SPIN_EQ, SPIN_EQI, SPIN_GE, SPIN_NE, SPIN_NEI, STORE,
-                  STOREI, SUB, SWAP, WORDS_PER_SECTOR, WORKI, WORKR)
+                  MULI, N_REGS, OFF_GRANT, OFF_LGRANT, OFF_PGRANTS, OFF_RD,
+                  OFF_TAIL, OFF_TICKET, PRNG, REL, R_AT, R_DX, R_G, R_K,
+                  R_LIDX, R_LOCK, R_NODE, R_NX, R_T1, R_T2, R_TID, R_TX, R_U,
+                  R_V, R_W, R_Z, SPIN_EQ, SPIN_EQI, SPIN_GE, SPIN_NE,
+                  SPIN_NEI, STORE, STOREI, SUB, SWAP, WORDS_PER_SECTOR,
+                  WORKI, WORKR)
 
 LT_THRESHOLD = 1  # the paper's LongTermThreshold (default; Layout overrides)
 
@@ -35,6 +36,8 @@ class Layout:
     private_arrays: bool = False  # Fig-2 idealized per-lock arrays
     long_term_threshold: int = LT_THRESHOLD  # TWA-family waiting split point
     sem_permits: int = 4          # twa-sem counting-semaphore capacity
+    reader_fraction: int = 50     # twa-rw: percent of acquisitions that are
+    #                               reads (0 = writer-only, 100 = read-only)
     count_collisions: bool = False  # TWA family: tally wakeups in node words
 
     @property
@@ -147,25 +150,8 @@ def _emit_wakeup_tally(asm: Asm, tag: str, thr: int, frontier: int) -> None:
 
 
 def gen_twa_acquire(asm: Asm, tag: str, layout: Layout) -> None:
-    thr = layout.long_term_threshold
-    asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
-    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
-    asm.emit(SUB, R_DX, R_TX, R_G)
-    asm.emit(BEQI, R_DX, 0, 0, f"{tag}_fast")
-    asm.emit(BLEI, R_DX, 0, thr, f"{tag}_st")
-    # long-term waiting via the waiting array
-    asm.emit(_hash_op(layout), R_AT, R_TX, R_LIDX if layout.private_arrays else R_LOCK)
-    asm.label(f"{tag}_lt")
-    asm.emit(LOAD, R_U, R_AT, 0, 0)
-    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)   # recheck grant (races)
-    asm.emit(SUB, R_DX, R_TX, R_G)
-    asm.emit(BLEI, R_DX, 0, thr, f"{tag}_st")
-    asm.emit(SPIN_NE, R_U, R_AT, 0, 0)          # wait for slot to change
-    if layout.count_collisions:
-        _emit_wakeup_tally(asm, tag, thr, 0)
-    asm.emit(JMP, 0, 0, 0, f"{tag}_lt")
-    asm.label(f"{tag}_st")                       # short-term: classic spin
-    asm.emit(SPIN_EQ, R_TX, R_LOCK, 0, OFF_GRANT)
+    _emit_twa_ticket_wait(asm, tag, layout, fast_label=f"{tag}_fast",
+                          tally=layout.count_collisions)
     asm.emit(ACQ, R_LIDX, 0, 1)
     asm.emit(JMP, 0, 0, 0, f"{tag}_in")
     asm.label(f"{tag}_fast")
@@ -174,12 +160,10 @@ def gen_twa_acquire(asm: Asm, tag: str, layout: Layout) -> None:
 
 
 def gen_twa_release(asm: Asm, tag: str, layout: Layout) -> None:
-    asm.emit(ADDI, R_K, R_TX, 0, 1)
-    asm.emit(REL, 0, R_LIDX, 0, 0)
-    asm.emit(STORE, R_LOCK, R_K, 0, OFF_GRANT)  # handover store FIRST
-    asm.emit(ADDI, R_T1, R_K, 0, layout.long_term_threshold)
-    asm.emit(_hash_op(layout), R_AT, R_T1, R_LIDX if layout.private_arrays else R_LOCK)
-    asm.emit(FADD, R_Z, R_AT, 1, 0)             # atomic notify (collisions)
+    # restore_z=False: nothing in the twa program reads R_Z after the
+    # notify, and the historical 6-op release sequence is what the fig8/
+    # fig9 calibrations were tuned on
+    _emit_twa_ticket_pass(asm, tag, layout, rel=True, restore_z=False)
 
 
 def gen_mcs_acquire(asm: Asm, tag: str) -> None:
@@ -507,6 +491,173 @@ def gen_twa_sem_release(asm: Asm, tag: str, layout: Layout) -> None:
     asm.emit(MOVI, R_Z, 0, 0, 0)                     # restore R_Z == 0
 
 
+# --------------------------------------------------------------------------
+# The TWA ticket wait/pass protocol, shared by plain ``twa`` and the PR-5
+# compositions (Fissile fusion + reader-writer), which reuse it as an
+# inner building block.  One copy of the protocol; flags cover the
+# call-site variance instead of duplicated emit sequences.
+# --------------------------------------------------------------------------
+
+def _emit_twa_ticket_wait(asm: Asm, tag: str, layout: Layout,
+                          fast_label: str | None = None,
+                          tally: bool = False) -> None:
+    """Draw a ticket and wait for the grant via TWA's short/long-term split.
+
+    Falls through holding the grant (``grant == R_TX``).  If ``fast_label``
+    is given, an uncontended draw (``dx == 0``) branches there instead so
+    the caller can mark the acquisition unwaited.  ``tally`` inserts the
+    Fig-8 collision instrumentation after each long-term wakeup.
+    """
+    thr = layout.long_term_threshold
+    arr = R_LIDX if layout.private_arrays else R_LOCK
+    asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    if fast_label is not None:
+        asm.emit(BEQI, R_DX, 0, 0, fast_label)
+    asm.emit(BLEI, R_DX, 0, thr, f"{tag}_st")
+    asm.emit(_hash_op(layout), R_AT, R_TX, arr)
+    asm.label(f"{tag}_lt")
+    asm.emit(LOAD, R_U, R_AT, 0, 0)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)   # recheck grant (races)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BLEI, R_DX, 0, thr, f"{tag}_st")
+    asm.emit(SPIN_NE, R_U, R_AT, 0, 0)          # wait for slot to change
+    if tally:
+        _emit_wakeup_tally(asm, tag, thr, 0)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_lt")
+    asm.label(f"{tag}_st")                       # short-term: classic spin
+    asm.emit(SPIN_EQ, R_TX, R_LOCK, 0, OFF_GRANT)
+
+
+def _emit_twa_ticket_pass(asm: Asm, tag: str, layout: Layout,
+                          rel: bool = False, restore_z: bool = True) -> None:
+    """Advance the grant past ticket ``R_TX`` and notify the hashed slot of
+    the waiter newly crossing into short-term.
+
+    ``rel=True`` stamps the REL handover marker right before the grant
+    store (plain ``twa``'s release); ``restore_z`` re-zeroes ``R_Z`` after
+    the notify FADD clobbers it — required wherever the program still
+    relies on the ``R_Z == 0`` convention downstream.
+    """
+    asm.emit(ADDI, R_K, R_TX, 0, 1)
+    if rel:
+        asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STORE, R_LOCK, R_K, 0, OFF_GRANT)  # handover store FIRST
+    asm.emit(ADDI, R_T1, R_K, 0, layout.long_term_threshold)
+    asm.emit(_hash_op(layout), R_AT, R_T1,
+             R_LIDX if layout.private_arrays else R_LOCK)
+    asm.emit(FADD, R_Z, R_AT, 1, 0)             # atomic notify (collisions)
+    if restore_z:
+        asm.emit(MOVI, R_Z, 0, 0, 0)            # restore R_Z == 0
+
+
+def gen_fissile_twa_acquire(asm: Asm, tag: str, layout: Layout) -> None:
+    """Fissile fusion (Fissile Locks): a test-and-set fast path over the
+    full TWA ticket + waiting-array slow path, in one program.
+
+    The outer lock is a single TAS word (the tail sector — fissile has no
+    queue, so ``OFF_TAIL`` is free).  An uncontended acquire is one SWAP.
+    On failure the thread acquires the INNER TWA lock (ticket +
+    ``LongTermThreshold`` split + waiting array) and, as the sole inner
+    holder, camps on the TAS word — so at most ONE thread ever spins on
+    the outer word (Fissile's bounded-spinning structure) while everyone
+    else waits compactly in the ticket queue / waiting array.
+
+    LOITER-style pipelining: the slow-path winner KEEPS the inner lock
+    through its critical section and passes it at release, right after
+    clearing the TAS — so the inner grant handover (store + notify)
+    overlaps the successor's outer wake/capture chain instead of sitting
+    between ACQ and the critical section.  ``R_V`` records the path taken
+    (0 = fast, 1 = slow) for the release.
+
+    Not FIFO: a fast-path arrival can barge past the inner holder — the
+    uncontended-latency / long-term-fairness trade the paper describes.
+    """
+    asm.emit(MOVI, R_V, 0, 0, 0)                  # path flag: fast
+    asm.emit(SWAP, R_T1, R_LOCK, R_T2, OFF_TAIL)  # TAS (R_T2 = tid+1, != 0)
+    asm.emit(BEQI, R_T1, 0, 0, f"{tag}_fast")
+    asm.emit(MOVI, R_V, 0, 0, 1)                  # path flag: slow
+    _emit_twa_ticket_wait(asm, tag, layout)       # inner TWA lock (retained)
+    asm.label(f"{tag}_tas")                       # sole outer-word camper
+    asm.emit(SWAP, R_T1, R_LOCK, R_T2, OFF_TAIL)
+    asm.emit(BEQI, R_T1, 0, 0, f"{tag}_got")
+    asm.emit(SPIN_EQI, 0, R_LOCK, 0, OFF_TAIL)    # sleep till TAS == 0
+    asm.emit(JMP, 0, 0, 0, f"{tag}_tas")
+    asm.label(f"{tag}_got")
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_fissile_twa_release(asm: Asm, tag: str, layout: Layout) -> None:
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STOREI, R_LOCK, 0, 0, OFF_TAIL)      # outer TAS := 0 (handover)
+    asm.emit(BEQI, R_V, 0, 0, f"{tag}_out")       # fast path never held inner
+    _emit_twa_ticket_pass(asm, tag, layout)       # hand the inner lock on
+    asm.label(f"{tag}_out")
+
+
+def gen_twa_rw_acquire(asm: Asm, tag: str, layout: Layout) -> None:
+    """TWA reader-writer lock: writers take the full TWA path, readers
+    fetch-and-add a reader count.
+
+    One TWA ticket lock arbitrates ENTRY for both roles, so long-term
+    reader and writer waiting both hash into the shared waiting array.  A
+    reader holds the entry lock only long enough to register
+    (``OFF_RD++``), passes it on, and reads concurrently with other
+    registered readers.  A writer keeps the entry lock through its whole
+    critical section: it first drains the reader count to zero (at most
+    one writer spins there at a time — new readers are fenced out behind
+    the entry lock), writes, and passes the entry on at release.
+
+    The per-iteration role is drawn from the thread PRNG against
+    ``layout.reader_fraction`` (percent) and recorded in ``R_V`` (0 =
+    reader, 1 = writer) for the release path and the rw probe.
+    """
+    rf = layout.reader_fraction
+    asm.emit(MOVI, R_V, 0, 0, 1)                  # default: writer
+    asm.emit(PRNG, R_T2, 0, 0, 100)
+    asm.emit(BGTI, R_T2, 0, rf - 1, f"{tag}_entry")
+    asm.emit(MOVI, R_V, 0, 0, 0)                  # reader
+    asm.label(f"{tag}_entry")
+    _emit_twa_ticket_wait(asm, tag, layout, fast_label=f"{tag}_fastin")
+    # entry held after waiting: readers register and pass it on, writers
+    # drain the reader count and keep it through the critical section
+    asm.emit(BEQI, R_V, 0, 0, f"{tag}_rdw")
+    asm.emit(SPIN_EQI, 0, R_LOCK, 0, OFF_RD)      # writer: drain readers
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_rdw")
+    asm.emit(FADD, R_U, R_LOCK, 1, OFF_RD)        # reader: register
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_pass")
+    asm.label(f"{tag}_fastin")                    # entry was uncontended
+    asm.emit(BEQI, R_V, 0, 0, f"{tag}_rdf")
+    asm.emit(SPIN_EQI, 0, R_LOCK, 0, OFF_RD)
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_rdf")
+    asm.emit(FADD, R_U, R_LOCK, 1, OFF_RD)
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_pass")                      # reader: pass the entry on
+    _emit_twa_ticket_pass(asm, tag, layout)
+    asm.label(f"{tag}_in")
+
+
+def gen_twa_rw_release(asm: Asm, tag: str, layout: Layout) -> None:
+    asm.emit(BEQI, R_V, 0, 0, f"{tag}_rd")
+    asm.emit(REL, 0, R_LIDX, 0, 0)                # writer: pass the entry
+    _emit_twa_ticket_pass(asm, tag, layout)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_out")
+    asm.label(f"{tag}_rd")
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(FADD, R_U, R_LOCK, -1, OFF_RD)       # wakes a draining writer
+    asm.label(f"{tag}_out")
+
+
 def anderson_init_mem(layout: Layout) -> np.ndarray:
     """Initial memory for Anderson: the slot of ticket 0 pre-granted (the
     classic ``flags[0] = 1``), per lock."""
@@ -531,9 +682,11 @@ INIT_MEM_GEN = {
 ACQUIRE_GEN = {
     "anderson": gen_anderson_acquire,
     "clh": lambda asm, tag, layout: gen_clh_acquire(asm, tag),
+    "fissile-twa": gen_fissile_twa_acquire,
     "hemlock": lambda asm, tag, layout: gen_hemlock_acquire(asm, tag),
     "ticket": lambda asm, tag, layout: gen_ticket_acquire(asm, tag),
     "twa": gen_twa_acquire,
+    "twa-rw": gen_twa_rw_acquire,
     "twa-sem": gen_twa_sem_acquire,
     "mcs": lambda asm, tag, layout: gen_mcs_acquire(asm, tag),
     "tkt-dual": lambda asm, tag, layout: gen_tkt_dual_acquire(
@@ -546,9 +699,11 @@ ACQUIRE_GEN = {
 RELEASE_GEN = {
     "anderson": gen_anderson_release,
     "clh": lambda asm, tag, layout: gen_clh_release(asm, tag),
+    "fissile-twa": gen_fissile_twa_release,
     "hemlock": lambda asm, tag, layout: gen_hemlock_release(asm, tag),
     "ticket": lambda asm, tag, layout: gen_ticket_release(asm, tag),
     "twa": gen_twa_release,
+    "twa-rw": gen_twa_rw_release,
     "twa-sem": gen_twa_sem_release,
     "mcs": lambda asm, tag, layout: gen_mcs_release(asm, tag),
     "tkt-dual": lambda asm, tag, layout: gen_tkt_dual_release(asm, tag),
@@ -623,6 +778,7 @@ def build_occupancy_probe(lock: str, layout: Layout, *, cs_work: int = 2,
     """
     cap = layout.sem_permits if lock == "twa-sem" else 1
     assert lock != "tkt-dual", "probe words live in the lgrant sector"
+    assert lock != "twa-rw", "readers overlap legally — use build_rw_probe"
     asm = Asm()
     asm.label("top")
     if layout.n_locks > 1:
@@ -637,6 +793,62 @@ def build_occupancy_probe(lock: str, layout: Layout, *, cs_work: int = 2,
         asm.emit(WORKI, 0, 0, 0, cs_work * WORK_SCALE)
     asm.emit(FADD, R_U, R_LOCK, -1, OCC_OFF)
     RELEASE_GEN[lock](asm, "r", layout)
+    if ncs_max > 0:
+        asm.emit(PRNG, R_W, 0, 0, ncs_max)
+        asm.emit(MULI, R_W, R_W, 0, WORK_SCALE)
+        asm.emit(WORKR, R_W, 0, 0, 0)
+    asm.emit(JMP, 0, 0, 0, "top")
+    return asm.finish()
+
+
+# rw probe constants: a writer weighs RW_WRITER_W in the shared occupancy
+# word, readers weigh 1, so any snapshot decomposes as rd + W * wr and a
+# single FADD return value tells each entrant exactly who it overlaps.
+RW_WRITER_W = 1 << 12          # > any thread count the sweeps use
+OVLP_OFF = OFF_LGRANT + 2      # reader-overlap witnessed flag (reachability)
+
+
+def build_rw_probe(layout: Layout, *, cs_work: int = 2,
+                   ncs_max: int = 16) -> np.ndarray:
+    """``build_occupancy_probe`` for ``twa-rw``: PROVES rw exclusion in-VM.
+
+    Readers FADD +1 / writers +``RW_WRITER_W`` into the occupancy word on
+    entry and undo it on exit.  The FADD's returned old value convicts on
+    the spot: a writer entering over ANY occupant, or a reader entering
+    over a writer, sets the violation word.  A reader entering over other
+    readers (old in ``[1, RW_WRITER_W)``) is legal overlap and is recorded
+    in ``OVLP_OFF`` — the reachability witness that the lock actually
+    admits concurrent readers rather than degenerating into a mutex.
+    """
+    asm = Asm()
+    asm.label("top")
+    if layout.n_locks > 1:
+        asm.emit(PRNG, R_LIDX, 0, 0, layout.n_locks)
+        asm.emit(MULI, R_LOCK, R_LIDX, 0, LOCK_STRIDE)
+    ACQUIRE_GEN["twa-rw"](asm, "a", layout)
+    asm.emit(BEQI, R_V, 0, 0, "rd_in")
+    asm.emit(FADD, R_U, R_LOCK, RW_WRITER_W, OCC_OFF)  # writer enters
+    asm.emit(BEQI, R_U, 0, 0, "cap_ok")                # must be alone
+    asm.emit(STOREI, R_LOCK, 1, 0, VIOL_OFF)
+    asm.emit(JMP, 0, 0, 0, "cap_ok")
+    asm.label("rd_in")
+    asm.emit(FADD, R_U, R_LOCK, 1, OCC_OFF)            # reader enters
+    asm.emit(BLEI, R_U, 0, 0, "cap_ok")                # alone
+    asm.emit(BGTI, R_U, 0, RW_WRITER_W - 1, "rd_viol")  # over a writer
+    asm.emit(STOREI, R_LOCK, 1, 0, OVLP_OFF)           # legal overlap
+    asm.emit(JMP, 0, 0, 0, "cap_ok")
+    asm.label("rd_viol")
+    asm.emit(STOREI, R_LOCK, 1, 0, VIOL_OFF)
+    asm.label("cap_ok")
+    if cs_work > 0:
+        asm.emit(WORKI, 0, 0, 0, cs_work * WORK_SCALE)
+    asm.emit(BEQI, R_V, 0, 0, "rd_out")
+    asm.emit(FADD, R_U, R_LOCK, -RW_WRITER_W, OCC_OFF)
+    asm.emit(JMP, 0, 0, 0, "rel")
+    asm.label("rd_out")
+    asm.emit(FADD, R_U, R_LOCK, -1, OCC_OFF)
+    asm.label("rel")
+    RELEASE_GEN["twa-rw"](asm, "r", layout)
     if ncs_max > 0:
         asm.emit(PRNG, R_W, 0, 0, ncs_max)
         asm.emit(MULI, R_W, R_W, 0, WORK_SCALE)

@@ -47,19 +47,21 @@ class SweepCell:
     wa_size: int
     long_term_threshold: int
     sem_permits: int
+    reader_fraction: int
 
 
 @dataclass(frozen=True)
 class SweepSpec:
     """Declarative description of a lockVM parameter sweep.
 
-    The first nine fields are *axes*: each accepts a single value or a
+    The first ten fields are *axes*: each accepts a single value or a
     sequence, and :meth:`cells` yields their cartesian product in field
-    order (locks outermost, sem_permits innermost).  The remaining fields
-    are scalar knobs shared by every cell.  The ``sem_permits`` axis maps
-    the mutex→semaphore continuum: permits=1 is a FIFO mutex, permits→T
-    approaches uncontended entry (only twa-sem consumes it; other locks
-    ignore the value).
+    order (locks outermost, reader_fraction innermost).  The remaining
+    fields are scalar knobs shared by every cell.  The ``sem_permits``
+    axis maps the mutex→semaphore continuum: permits=1 is a FIFO mutex,
+    permits→T approaches uncontended entry (only twa-sem consumes it).
+    The ``reader_fraction`` axis (percent of acquisitions that are reads)
+    maps the writer-only→read-only continuum; only twa-rw consumes it.
     """
 
     locks: tuple | str = ("ticket", "twa", "mcs")
@@ -71,6 +73,7 @@ class SweepSpec:
     wa_size: tuple | int = 4096          # waiting-array slots (pow2, Fig 8)
     long_term_threshold: tuple | int = LT_THRESHOLD  # TWA-family split point
     sem_permits: tuple | int = 4         # twa-sem capacity (axis)
+    reader_fraction: tuple | int = 50    # twa-rw read percent (axis, Fig 10)
     ncs_max: int = 200
     cs_rand: tuple | None = None
     n_locks: int = 1
@@ -81,20 +84,24 @@ class SweepSpec:
     def cells(self) -> list[SweepCell]:
         return [SweepCell(lock=lk, n_threads=t, seed=s, cs_work=cw,
                           private_arrays=pa, costs=co, wa_size=ws,
-                          long_term_threshold=lt, sem_permits=sp)
-                for lk, t, s, cw, pa, co, ws, lt, sp in itertools.product(
+                          long_term_threshold=lt, sem_permits=sp,
+                          reader_fraction=rf)
+                for lk, t, s, cw, pa, co, ws, lt, sp, rf
+                in itertools.product(
                     _as_tuple(self.locks), _as_tuple(self.threads),
                     _as_tuple(self.seeds), _as_tuple(self.cs_work),
                     _as_tuple(self.private_arrays), _as_tuple(self.costs),
                     _as_tuple(self.wa_size),
                     _as_tuple(self.long_term_threshold),
-                    _as_tuple(self.sem_permits))]
+                    _as_tuple(self.sem_permits),
+                    _as_tuple(self.reader_fraction))]
 
     def layout_for(self, cell: SweepCell) -> Layout:
         return Layout(n_threads=cell.n_threads, n_locks=self.n_locks,
                       wa_size=cell.wa_size, private_arrays=cell.private_arrays,
                       long_term_threshold=cell.long_term_threshold,
                       sem_permits=cell.sem_permits,
+                      reader_fraction=cell.reader_fraction,
                       count_collisions=self.count_collisions)
 
 
@@ -152,6 +159,7 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
             "costs": cell.costs, "wa_size": cell.wa_size,
             "long_term_threshold": cell.long_term_threshold,
             "sem_permits": cell.sem_permits,
+            "reader_fraction": cell.reader_fraction,
             "layout": layout,  # the run's OWN layout (collision readers
             #                    must not reconstruct it by hand)
             "acquisitions": raw["acquisitions"][i, :t],
@@ -183,6 +191,7 @@ def sweep_curves(spec: SweepSpec, value: str = "throughput") -> dict:
     assert len(_as_tuple(spec.wa_size)) == 1
     assert len(_as_tuple(spec.long_term_threshold)) == 1
     assert len(_as_tuple(spec.sem_permits)) == 1
+    assert len(_as_tuple(spec.reader_fraction)) == 1
     results = run_sweep(spec)
     by_cell = {(r["lock"], r["n_threads"], r["seed"]): r[value]
                for r in results}

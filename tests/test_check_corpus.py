@@ -31,10 +31,13 @@ def test_corpus_is_present_and_covers_all_invariant_classes():
     assert CORPUS, "tests/corpus is empty — run make_corpus"
     names = [os.path.basename(p) for p in CORPUS]
     assert sum(n.startswith("diff_") for n in names) >= 3
+    # near-wrap pins: tickets seeded at INT32_MAX-2 must replay clean
+    assert sum(n.startswith("wrap_") for n in names) >= 2
     covered = set()
     for p in CORPUS:
         covered |= set(load_scenario(p).meta.get("expect_classes", []))
-    assert {"exclusion", "conservation", "deadlock", "collision"} <= covered
+    assert {"exclusion", "conservation", "deadlock", "collision",
+            "liveness"} <= covered
 
 
 @pytest.mark.parametrize("path", CORPUS,

@@ -1,25 +1,28 @@
-"""CLH, Hemlock, and the TWA counting semaphore on the lockVM.
+"""CLH, Hemlock, the TWA counting semaphore, Fissile fusion, and the TWA
+reader-writer lock on the lockVM.
 
-Covers the PR-2 acceptance invariants: the new locks must be full sweep
-citizens (vmap/map bit-identical, padded sweep identical to single-cell
-run_sim), must respect conservation (every acquire paired with one release,
-semaphore occupancy never above the permit cap, mutex occupancy never above
-1), and the new SweepSpec axes (wa_size, long_term_threshold) must reach the
-generated programs.
+Covers the PR-2 and PR-5 acceptance invariants: the new locks must be full
+sweep citizens (vmap/map bit-identical, padded sweep identical to
+single-cell run_sim), must respect conservation (every acquire paired with
+one release, semaphore occupancy never above the permit cap, mutex
+occupancy never above 1, readers never overlapping a writer), and the new
+SweepSpec axes (wa_size, long_term_threshold, sem_permits,
+reader_fraction) must reach the generated programs.
 """
 
 import numpy as np
 import pytest
 
 from repro.sim import (Layout, SIM_LOCKS, SweepSpec, build_occupancy_probe,
-                       init_state, read_collision_counters, run_contention,
-                       run_sweep)
+                       build_rw_probe, init_state, read_collision_counters,
+                       run_contention, run_sweep)
 from repro.sim.engine import run_sim
-from repro.sim.isa import OFF_GRANT, OFF_TICKET
-from repro.sim.programs import INIT_MEM_GEN, OCC_OFF, VIOL_OFF
+from repro.sim.isa import OFF_GRANT, OFF_RD, OFF_TAIL, OFF_TICKET
+from repro.sim.programs import INIT_MEM_GEN, OCC_OFF, OVLP_OFF, VIOL_OFF
 
 H = 120_000
 NEW_LOCKS = ("clh", "hemlock", "twa-sem")
+PR5_LOCKS = ("fissile-twa", "twa-rw")
 
 
 def _run_sim_cell(lock, n_threads, *, seed, horizon=H, **layout_kw):
@@ -37,6 +40,8 @@ def _run_sim_cell(lock, n_threads, *, seed, horizon=H, **layout_kw):
 
 def test_new_locks_registered():
     assert set(NEW_LOCKS) <= set(SIM_LOCKS)
+    assert set(PR5_LOCKS) <= set(SIM_LOCKS)
+    assert len(SIM_LOCKS) == 13
 
 
 def test_new_locks_sweep_matches_sequential_run_sim():
@@ -120,6 +125,119 @@ def test_wa_size_axis_reaches_the_program():
         rates[r["wa_size"]] = futile.sum() / wakes.sum()
     assert rates[16] > 0.05
     assert rates[2048] < 0.5 * rates[16]
+
+
+# ---------------------------------------------------------------------------
+# PR-5: Fissile fusion + TWA reader-writer
+# ---------------------------------------------------------------------------
+
+def test_pr5_locks_sweep_matches_sequential_run_sim():
+    """fissile-twa and twa-rw must be full sweep citizens: the padded,
+    batched sweep equals the unpadded single-cell engine bit for bit."""
+    spec = SweepSpec(locks=PR5_LOCKS, threads=(3, 8), seeds=(1, 2),
+                     horizon=60_000)
+    for r in run_sweep(spec):
+        ref = _run_sim_cell(r["lock"], r["n_threads"], seed=r["seed"],
+                            horizon=60_000)
+        assert np.array_equal(r["acquisitions"], ref["acquisitions"]), \
+            (r["lock"], r["n_threads"], r["seed"])
+        assert r["events"] == ref["events"]
+        assert np.array_equal(r["mem"], ref["mem"])
+
+
+def test_pr5_locks_modes_bitwise_equal():
+    spec = SweepSpec(locks=PR5_LOCKS, threads=(2, 6), seeds=1,
+                     horizon=60_000)
+    for a, b in zip(run_sweep(spec, mode="map"),
+                    run_sweep(spec, mode="vmap")):
+        assert np.array_equal(a["acquisitions"], b["acquisitions"])
+        assert a["events"] == b["events"]
+        assert np.array_equal(a["mem"], b["mem"])
+
+
+def test_rw_probe_writer_exclusion_and_reader_overlap():
+    """In-VM proof for the rw lock: the weighted probe's violation word
+    stays clear (no reader ever overlaps a writer, writers are always
+    alone) while the overlap word proves concurrent readers are actually
+    REACHABLE — the lock is a real rw lock, not a mutex in disguise.  A
+    reader CS longer than the entry handover makes overlap certain."""
+    layout = Layout(n_threads=8, n_locks=1, reader_fraction=60)
+    prog = build_rw_probe(layout, cs_work=30)
+    pc, regs = init_state(layout)
+    res = run_sim(prog, n_threads=8, mem_words=layout.mem_words, n_locks=1,
+                  init_pc=pc, init_regs=regs, wa_base=layout.wa_base,
+                  wa_size=layout.wa_size, horizon=H, seed=3)
+    assert res["mem"][VIOL_OFF] == 0           # rw exclusion held
+    assert res["mem"][OVLP_OFF] == 1           # reader overlap reached
+    assert res["acquisitions"].sum() > 0
+
+
+def test_rw_probe_writer_only_never_overlaps():
+    """Negative control: at reader_fraction=0 the probe must see neither a
+    violation nor any overlap, and the reader count must stay untouched."""
+    layout = Layout(n_threads=8, n_locks=1, reader_fraction=0)
+    prog = build_rw_probe(layout, cs_work=30)
+    pc, regs = init_state(layout)
+    res = run_sim(prog, n_threads=8, mem_words=layout.mem_words, n_locks=1,
+                  init_pc=pc, init_regs=regs, wa_base=layout.wa_base,
+                  wa_size=layout.wa_size, horizon=H, seed=3)
+    assert res["mem"][VIOL_OFF] == 0
+    assert res["mem"][OVLP_OFF] == 0
+    assert res["mem"][OFF_RD] == 0
+
+
+def test_rw_reader_fraction_axis_reaches_the_program():
+    """The SweepSpec reader_fraction axis must reach the generated
+    programs: read-only beats writer-only throughput once the CS is long
+    enough for readers to overlap, and twa-rw conserves entry tickets."""
+    spec = SweepSpec(locks="twa-rw", threads=16, seeds=1, cs_work=80,
+                     ncs_max=100, reader_fraction=(0, 100), horizon=H)
+    tput = {}
+    for r in run_sweep(spec):
+        tput[r["reader_fraction"]] = r["throughput"]
+        ticket, grant = r["mem"][OFF_TICKET], r["mem"][OFF_GRANT]
+        acq = int(r["acquisitions"].sum())
+        assert 0 <= ticket - grant <= 16
+        assert grant <= acq <= ticket
+    assert tput[100] > 1.5 * tput[0], tput
+
+
+def test_fissile_fast_and_slow_paths_both_reachable():
+    """Fissile's two paths must BOTH be live on at least one sweep axis
+    point: at T=1 every acquisition is a TAS fast-path hit; at T=16 the
+    slow path dominates but fast-path barging still lands — the
+    fast/slow split is exactly acq - waited / waited."""
+    spec = SweepSpec(locks="fissile-twa", threads=(1, 16), seeds=1,
+                     horizon=H)
+    res = {r["n_threads"]: r for r in run_sweep(spec)}
+    t1, t16 = res[1], res[16]
+    assert t1["acquisitions"].sum() > 0
+    assert t1["waited_acquisitions"].sum() == 0       # all fast at T=1
+    fast16 = int(t16["acquisitions"].sum()
+                 - t16["waited_acquisitions"].sum())
+    slow16 = int(t16["waited_acquisitions"].sum())
+    assert slow16 > 0, "slow path unreachable at T=16"
+    assert fast16 > 0, "fast path (barging) unreachable at T=16"
+    # inner-lock conservation: draws == slow acquisitions up to in-flight
+    ticket = int(t16["mem"][OFF_TICKET])
+    grant = int(t16["mem"][OFF_GRANT])
+    assert 0 <= ticket - slow16 <= 16
+    assert 0 <= ticket - grant <= 16
+
+
+def test_fissile_occupancy_cap_never_violated():
+    """The standard mutex probe applies to fissile (cap 1): barging may
+    reorder owners but never doubles them."""
+    layout = Layout(n_threads=12, n_locks=1)
+    prog = build_occupancy_probe("fissile-twa", layout)
+    pc, regs = init_state(layout)
+    res = run_sim(prog, n_threads=12, mem_words=layout.mem_words, n_locks=1,
+                  init_pc=pc, init_regs=regs, wa_base=layout.wa_base,
+                  wa_size=layout.wa_size, horizon=H, seed=5)
+    assert res["mem"][VIOL_OFF] == 0
+    assert 0 <= res["mem"][OCC_OFF] <= 1
+    assert res["mem"][OFF_TAIL] >= 0               # TAS word, not a queue
+    assert res["acquisitions"].sum() > 0
 
 
 def test_long_term_threshold_axis_reaches_the_program():
