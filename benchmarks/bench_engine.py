@@ -1,19 +1,30 @@
-"""Engine-mode benchmark — map vs vmap vs sched on a deliberately skewed sweep.
+"""Engine-mode benchmark — map vs vmap vs sched vs pallas on a skewed sweep,
+plus the driver-geometry frontier.
 
-The batched engine offers three bit-identical sweep drivers; this suite
+The batched engine offers four bit-identical sweep drivers; this suite
 measures the cost model that separates them.  The sweep is skewed on
 purpose: a few heavy cells (many threads, long horizon) next to many light
 ones, so lane-parallel ``vmap`` pays ``max(events) × B`` lane-steps (idle
-lanes still execute the self-guarding no-event step) while ``map`` and the
-work-stealing ``sched`` driver pay ~``sum(events)``.
+lanes still execute the self-guarding no-event step) while ``map``, the
+work-stealing ``sched`` driver, and the fused-kernel ``pallas`` driver pay
+~``sum(events)``.
 
 Rows: ``bench_engine/<mode>/wall_ms`` (median of ``repeats`` timed runs,
 compile excluded via a warmup call), ``bench_engine/sum_events`` /
-``max_events`` (the sweep's skew), and ``bench_engine/speedup/<a>_over_<b>``
-ratios.  The same numbers land in ``BENCH_engine.json`` — CI uploads it per
-run, so the engine-perf trajectory is inspectable per change — and the
+``max_events`` (the sweep's skew), padding-waste fractions from the sweep's
+``pad_stats`` report, ``bench_engine/speedup/<a>_over_<b>`` ratios, and the
+driver-geometry frontier — one ``bench_engine/frontier/...`` row per sched
+``lanes×chunk`` and pallas ``chunk`` point.  The same numbers land in
+``BENCH_engine.json`` (every mode row and frontier row carries the
+``backend`` column) — CI uploads it per run, so the engine-perf trajectory
+is inspectable per change.
+
+Speed gates are backend physics, never interpret artifacts: on CPU the
 ``sched_over_vmap`` speedup is asserted ≥ 1 (the scheduler must never lose
-to lane-parallel on its home turf; on CPU it should win ~2×+).
+to lane-parallel on its home turf) while pallas runs in interpret mode and
+is asserted *correct only*; ``pallas_over_map`` is asserted ≥ 1 solely on a
+real accelerator backend, where the fused kernel's whole reason to exist is
+beating the per-event XLA dispatch.
 """
 
 from __future__ import annotations
@@ -44,67 +55,116 @@ SMOKE_CELLS = (
     + [("mcs", 4, 25_000)] * 3
 )
 
-MODES = (("map", {}), ("vmap", {}), ("sched", {"lanes": 4, "chunk": 512}))
+MODES = (("map", {}), ("vmap", {}), ("sched", {"lanes": 4, "chunk": 512}),
+         ("pallas", {"chunk": 128}))
+
+# Driver-geometry frontier: wall-clock per (lanes, chunk) for sched and per
+# burst chunk for pallas.  The frontier shows where each geometry knob stops
+# paying — refill overhead at tiny chunks, straggler overshoot at huge ones.
+SCHED_FRONTIER = tuple((lanes, chunk)
+                       for lanes in (1, 2, 4, 8) for chunk in (64, 512))
+PALLAS_FRONTIER = (32, 128, 512)
+SCHED_FRONTIER_SMOKE = ((2, 64), (4, 512))
+PALLAS_FRONTIER_SMOKE = (64, 128)
+
+
+def _time_sweep(programs, kw, mode, mode_kw, repeats) -> tuple[float, dict]:
+    """Median wall of ``repeats`` timed runs, compile excluded via warmup."""
+    out = engine.run_sweep(programs, mode=mode, **mode_kw, **kw)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = engine.run_sweep(programs, mode=mode, **mode_kw, **kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
 
 
 def run(smoke: bool = False, repeats: int = 3,
         json_path: str | None = None) -> dict:
+    backend = jax.default_backend()
     cells = SMOKE_CELLS if smoke else SKEWED_CELLS
     programs, kw = pack_engine_cells(cells, seeds=1)
 
     walls: dict[str, float] = {}
     reference = None
     for mode, mode_kw in MODES:
-        out = engine.run_sweep(programs, mode=mode, **mode_kw, **kw)  # compile
-        times = []
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            out = engine.run_sweep(programs, mode=mode, **mode_kw, **kw)
-            times.append(time.perf_counter() - t0)
-        times.sort()
-        walls[mode] = times[len(times) // 2]
+        walls[mode], out = _time_sweep(programs, kw, mode, mode_kw, repeats)
         emit(f"bench_engine/{mode}/wall_ms", f"{walls[mode] * 1e3:.1f}",
              f"median_of_{repeats} " + " ".join(f"{k}={v}"
                                                 for k, v in mode_kw.items()))
         if reference is None:
             reference = out
-        else:  # the three drivers must agree bit for bit
+        else:  # the four drivers must agree bit for bit
             for key in ("acquisitions", "events", "grant_value"):
                 assert np.array_equal(reference[key], out[key]), (mode, key)
 
     events = reference["events"]
     emit("bench_engine/sum_events", int(events.sum()),
-         f"B={len(cells)} lane_steps_paid_by_map_and_sched")
+         f"B={len(cells)} lane_steps_paid_by_map_sched_pallas")
     emit("bench_engine/max_events", int(events.max()),
          f"x B = {int(events.max()) * len(cells)} lane_steps_paid_by_vmap")
+    pad_stats = reference["pad_stats"]
+    for k in ("live_thread_frac", "live_prog_frac", "live_mem_frac"):
+        emit(f"bench_engine/pad/{k}", f"{pad_stats[k]:.3f}",
+             "padded_batch_fraction_doing_real_work")
 
     speedups = {}
-    for a, b in (("sched", "vmap"), ("map", "vmap"), ("map", "sched")):
+    for a, b in (("sched", "vmap"), ("map", "vmap"), ("map", "sched"),
+                 ("pallas", "map"), ("pallas", "vmap")):
         speedups[f"{a}_over_{b}"] = walls[b] / walls[a]
         emit(f"bench_engine/speedup/{a}_over_{b}",
              f"{speedups[f'{a}_over_{b}']:.2f}",
              "wall_ratio (>1 means first is faster)")
 
+    # Geometry frontier: every row re-checks bit-identity (frontier points
+    # are alternate geometries of the same drivers, not new semantics).
+    frontier = []
+    sched_grid = SCHED_FRONTIER_SMOKE if smoke else SCHED_FRONTIER
+    pallas_grid = PALLAS_FRONTIER_SMOKE if smoke else PALLAS_FRONTIER
+    points = ([("sched", {"lanes": l, "chunk": c}) for l, c in sched_grid]
+              + [("pallas", {"chunk": c}) for c in pallas_grid])
+    for mode, mode_kw in points:
+        wall, out = _time_sweep(programs, kw, mode, mode_kw,
+                                max(1, repeats - 1))
+        assert np.array_equal(reference["grant_value"],
+                              out["grant_value"]), (mode, mode_kw)
+        tag = "x".join(str(v) for v in mode_kw.values())
+        emit(f"bench_engine/frontier/{mode}/{tag}/wall_ms",
+             f"{wall * 1e3:.1f}",
+             " ".join(f"{k}={v}" for k, v in mode_kw.items()))
+        frontier.append({"backend": backend, "mode": mode, **mode_kw,
+                         "wall_ms": round(wall * 1e3, 1)})
+
     point = {
-        "backend": jax.default_backend(),
+        "backend": backend,
         "n_cells": len(cells),
         "smoke": smoke,
         "sum_events": int(events.sum()),
         "max_events": int(events.max()),
+        "pad_stats": {k: (round(v, 4) if isinstance(v, float) else v)
+                      for k, v in pad_stats.items()},
         "wall_ms": {m: round(w * 1e3, 1) for m, w in walls.items()},
         "speedup": {k: round(v, 3) for k, v in speedups.items()},
         "sched_params": dict(MODES[2][1]),
+        "pallas_params": dict(MODES[3][1]),
+        "frontier": frontier,
     }
     if json_path:
         os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
         with open(json_path, "w") as f:
             json.dump(point, f, indent=1)
-    # The no-regression gate is CPU physics (idle vmap lanes still pay the
-    # scalar step); on accelerators vmap's lanes are genuinely parallel and
-    # sched ~= vmap + refill overhead, so there only the JSON records it.
-    if jax.default_backend() == "cpu":
+    # The no-regression gates are backend physics.  CPU: idle vmap lanes
+    # still pay the scalar step, so sched must beat vmap; pallas runs the
+    # interpreter there and its wall-clock proves nothing.  Accelerators:
+    # the fused kernel must beat per-event XLA dispatch, or the fast path
+    # has regressed into a slow path.
+    if backend == "cpu":
         assert speedups["sched_over_vmap"] >= 1.0, (
             f"sched regressed below vmap on the skewed sweep: {point}")
+    else:
+        assert speedups["pallas_over_map"] >= 1.0, (
+            f"pallas fast path lost to per-event dispatch: {point}")
     return point
 
 

@@ -1,9 +1,23 @@
-"""Shared benchmark plumbing: CSV emission + tiny timing helpers."""
+"""Shared benchmark plumbing: CSV emission + tiny timing helpers.
+
+Importing this module also surfaces the engine's INFO log line stating
+which sweep driver ``mode="auto"`` resolved to — benchmark output must say
+which driver produced its numbers (explicit ``mode=`` still wins; the line
+then simply doesn't appear).
+"""
 
 from __future__ import annotations
 
+import logging
 import sys
 import time
+
+_sim_log = logging.getLogger("repro.sim")
+if not _sim_log.handlers:  # idempotent; respects an app-configured logger
+    _handler = logging.StreamHandler(sys.stderr)
+    _handler.setFormatter(logging.Formatter("%(name)s: %(message)s"))
+    _sim_log.addHandler(_handler)
+    _sim_log.setLevel(logging.INFO)
 
 
 def emit(name: str, value, derived: str = "") -> None:

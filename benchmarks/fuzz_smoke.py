@@ -1,7 +1,7 @@
 """Fuzz smoke — the ``sim.check`` differential fuzzer as a benchmark suite.
 
 Runs a small deterministic batch (composed lock scenarios + random ISA
-programs) through the NumPy oracle and all three engine sweep modes,
+programs) through the NumPy oracle and all four engine sweep modes,
 asserting zero differential/invariant failures, then runs one mutation
 self-test (``eager_store``) to prove the checker still catches what it
 claims to catch.  Emits throughput CSV (oracle events/s — the oracle is
@@ -29,11 +29,12 @@ def run(smoke: bool = False) -> dict:
     n_cases = SMOKE_CASES if smoke else CASES
     scenarios = generate_batch(n_cases, SEED)
     t0 = time.time()
-    # oracle vs map/vmap/sched (randomized lane geometry) + invariants
+    # oracle vs map/vmap/sched/pallas (randomized lane geometry and
+    # pallas burst chunk) + invariants
     report = fuzz(scenarios, sched_seed=SEED)
     dt = time.time() - t0
     emit("fuzz/cases", n_cases,
-         f"composed+random, seed={SEED}, modes=map/vmap/sched")
+         f"composed+random, seed={SEED}, modes=map/vmap/sched/pallas")
     emit("fuzz/oracle_events", report.total_events,
          f"{report.total_events / max(dt, 1e-9):,.0f} events/s")
     emit("fuzz/failures", len(report.failures),

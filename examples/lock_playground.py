@@ -9,6 +9,7 @@
     PYTHONPATH=src python examples/lock_playground.py
 """
 
+import logging
 import threading
 
 from repro.core import (DistributedTWALock, DistributedTicketLock,
@@ -18,6 +19,10 @@ from repro.sim.programs import SIM_LOCKS
 from repro.sim.workloads import SweepSpec, run_contention, run_sweep
 
 THREADS = (2, 16, 64)
+
+# surface the engine's mode='auto' -> <driver> line: the sweeps below don't
+# pin a mode, so the log is the only place the chosen driver is visible
+logging.basicConfig(level=logging.INFO, format="%(name)s: %(message)s")
 
 print("== lockVM: throughput (acq/cycle) and avg handover (cycles) ==")
 print(f"{'lock':>12} | " + " | ".join(f"T={t:<2}  tput   hand" for t in THREADS))

@@ -5,4 +5,35 @@ select kernel vs pure-jnp oracle via use_pallas).
   paper's fetch-and-add doorway, TPU-native).
 * mamba_scan     — Mamba-1 selective scan (falcon-mamba hot spot).
 * rglru          — RG-LRU gated linear recurrence (recurrentgemma hot spot).
+
+All kernels (and the lockVM's ``mode="pallas"`` sweep driver in
+``repro.sim.engine_pallas``) share :func:`default_interpret` to decide
+whether ``pallas_call`` should compile natively or run the interpreter:
+interpret exactly when no accelerator backend is present.  Every entry
+point keeps ``interpret`` overridable (and jit-static), so tests can force
+the interpreter on a device and device runs can be forced from CPU-hosted
+tracing.
 """
+
+from __future__ import annotations
+
+import jax
+
+# Backends whose Pallas lowering is real hardware; anything else (cpu, the
+# METAL/interpreter stand-ins) must run pallas_call in interpret mode.
+ACCELERATOR_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def default_interpret() -> bool:
+    """True when ``pallas_call`` must interpret (no TPU/GPU backend).
+
+    Resolved at trace time: callers take ``interpret: bool | None = None``
+    as a jit-static argument and substitute this when it is None, so the
+    chosen value is baked into the compiled executable per backend.
+    """
+    return jax.default_backend() not in ACCELERATOR_BACKENDS
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``interpret`` if explicitly given, else the backend default."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import resolve_interpret
+
 LANE = 128
 
 
@@ -64,8 +66,12 @@ def _scan_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, Dsk_ref, h0_ref,
 @functools.partial(jax.jit, static_argnames=("d_tile", "l_chunk", "interpret"))
 def selective_scan_pallas(x, dt, A, B, C, D_skip, h0=None, *,
                           d_tile: int = LANE, l_chunk: int = 256,
-                          interpret: bool = True):
-    """Pallas selective scan; same contract as ref.selective_scan_ref."""
+                          interpret: bool | None = None):
+    """Pallas selective scan; same contract as ref.selective_scan_ref.
+
+    ``interpret=None`` autodetects: interpret on CPU, native on TPU/GPU.
+    """
+    interpret = resolve_interpret(interpret)
     L, Dm = x.shape
     N = A.shape[1]
     if h0 is None:

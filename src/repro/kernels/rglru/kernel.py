@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import resolve_interpret
+
 LANE = 128
 
 
@@ -71,8 +73,12 @@ def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hout_ref, h_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("d_tile", "l_chunk", "interpret"))
 def rglru_scan_pallas(a, b, h0=None, *, d_tile: int = LANE,
-                      l_chunk: int = 256, interpret: bool = True):
-    """Pallas RG-LRU scan; same contract as ref.rglru_scan_ref."""
+                      l_chunk: int = 256, interpret: bool | None = None):
+    """Pallas RG-LRU scan; same contract as ref.rglru_scan_ref.
+
+    ``interpret=None`` autodetects: interpret on CPU, native on TPU/GPU.
+    """
+    interpret = resolve_interpret(interpret)
     L, D = a.shape
     if h0 is None:
         h0 = jnp.zeros((D,), a.dtype)

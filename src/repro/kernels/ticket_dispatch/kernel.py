@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import resolve_interpret
+
 LANE = 128
 SUBLANE = 8
 
@@ -49,11 +51,14 @@ def _ticket_kernel(ids_ref, tickets_ref, counters_ref, *, n_experts_pad: int):
 
 @functools.partial(jax.jit, static_argnames=("n_experts", "block_n", "interpret"))
 def ticket_dispatch_pallas(expert_ids: jnp.ndarray, n_experts: int,
-                           block_n: int = 1024, interpret: bool = True) -> jnp.ndarray:
+                           block_n: int = 1024,
+                           interpret: bool | None = None) -> jnp.ndarray:
     """FIFO tickets for a flat int32 arrival sequence (any shape, flattened).
 
-    interpret=True validates on CPU; on a real TPU pass interpret=False.
+    ``interpret=None`` autodetects: interpret on CPU, native on TPU/GPU
+    (:func:`repro.kernels.default_interpret`); an explicit bool wins.
     """
+    interpret = resolve_interpret(interpret)
     shape = expert_ids.shape
     flat = expert_ids.reshape(-1).astype(jnp.int32)
     n = flat.shape[0]

@@ -1,7 +1,8 @@
 """lockVM — JAX discrete-event simulator for the paper's lock algorithms."""
 
 from .costs import Costs, DEFAULT_COSTS
-from .engine import EVENT_ORDER_CONTRACT, debug_states, run_sim
+from .engine import (EVENT_ORDER_CONTRACT, choose_mode, debug_states,
+                     run_sim)
 from .programs import (ACQUIRE_GEN, INIT_MEM_GEN, LT_THRESHOLD, Layout,
                        PROG_LEN, RELEASE_GEN, RW_WRITER_W, SIM_LOCKS,
                        build_invalidation_diameter, build_mutexbench,
@@ -14,7 +15,7 @@ from .workloads import (SweepCell, SweepSpec, fig1_invalidation_diameter,
                         run_sweep, sweep_curves)
 
 __all__ = [
-    "Costs", "DEFAULT_COSTS", "run_sim", "debug_states",
+    "Costs", "DEFAULT_COSTS", "run_sim", "debug_states", "choose_mode",
     "EVENT_ORDER_CONTRACT", "Layout", "SIM_LOCKS", "PROG_LEN",
     "LT_THRESHOLD", "build_mutexbench", "build_invalidation_diameter",
     "build_occupancy_probe", "build_rw_probe", "RW_WRITER_W",

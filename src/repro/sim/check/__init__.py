@@ -9,8 +9,9 @@ Three layers:
     scenarios wrapping every ``SIM_LOCKS`` generator in randomized critical
     sections with shared occupancy counters.
   * :mod:`invariants` + :mod:`runner` — oracle vs ``run_sweep`` differential
-    execution (bit-identical stats across ``mode="map"/"vmap"/"sched"``,
-    with per-case randomized sched lane geometry), engine-independent
+    execution (bit-identical stats across
+    ``mode="map"/"vmap"/"sched"/"pallas"``, with per-case randomized sched
+    lane geometry and pallas burst chunk), engine-independent
     invariants (exclusion incl. the weighted rw probe, wrap-aware
     conservation/FIFO, per-thread liveness bounds, deadlock, collision),
     a greedy shrinker, and a replayable ``.npz`` corpus format.
@@ -24,9 +25,10 @@ from .generate import (PAD_LOCKS, PAD_MEM_WORDS, PAD_THREADS, Scenario,
                        gen_random_scenario, generate_batch)
 from .invariants import check_invariants
 from .oracle import ORACLE_MUTATIONS, Trace, run_oracle
-from .runner import (MODES, SCHED_GEOMETRY_POOL, FuzzReport, case_fails,
-                     case_problems, check_case, count_instructions,
-                     failure_classes, fuzz, load_scenario, run_engine_batch,
+from .runner import (MODES, PALLAS_CHUNK_POOL, SCHED_GEOMETRY_POOL,
+                     FuzzReport, case_fails, case_problems, check_case,
+                     count_instructions, failure_classes, fuzz,
+                     load_scenario, pallas_chunks, run_engine_batch,
                      run_oracle_case, save_scenario, sched_geometries,
                      shrink)
 
@@ -40,4 +42,5 @@ __all__ = [
     "count_instructions", "run_engine_batch", "run_oracle_case",
     "save_scenario", "load_scenario", "MODES",
     "sched_geometries", "SCHED_GEOMETRY_POOL",
+    "pallas_chunks", "PALLAS_CHUNK_POOL",
 ]

@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.sim.check --cases 200 --seed from-run-id
 
 Runs a mixed batch (composed lock scenarios + random ISA programs) through
-the oracle and all three engine sweep modes, checks the invariant catalog,
+the oracle and all four engine sweep modes (``pallas`` in interpret mode on
+CPU), checks the invariant catalog,
 and on failure greedily shrinks the first failing case and writes it as a
 replayable ``.npz`` under ``--artifact-dir`` before exiting nonzero.
 

@@ -1,4 +1,4 @@
-"""Differential runner: oracle vs ``run_sweep`` across all three sweep
+"""Differential runner: oracle vs ``run_sweep`` across all four sweep
 modes, invariant checking, greedy shrinking, and the replayable corpus.
 
 A fuzz batch is executed exactly like a figure sweep: every scenario is
@@ -16,11 +16,12 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .. import engine
+from ..engine_pallas import DEFAULT_PALLAS_CHUNK
 from .generate import Scenario
 from .invariants import check_invariants
 from .oracle import Trace, run_oracle
 
-MODES = ("map", "vmap", "sched")
+MODES = ("map", "vmap", "sched", "pallas")
 
 # Stats compared bit-identically between oracle and every engine mode.
 STAT_KEYS = ("acquisitions", "waited_acquisitions", "handover_sum",
@@ -32,6 +33,13 @@ STAT_KEYS = ("acquisitions", "waited_acquisitions", "handover_sum",
 # typical sub-batch sizes (the B < lanes clamp), and the CPU default.
 SCHED_GEOMETRY_POOL = ((1, 1), (2, 64), (3, 1), (6, 128),
                        (engine.DEFAULT_LANES, engine.DEFAULT_CHUNK))
+
+# Burst-chunk pool for the pallas driver.  chunk=1 terminates the in-kernel
+# while_loop after every single step (no overshoot), 16 overshoots on
+# nearly every cell, and the default amortizes the termination check; the
+# driver must be chunk-independent bit for bit (overshoot steps are
+# identity no-events), so any chunk-dependent difference IS a bug.
+PALLAS_CHUNK_POOL = (1, 16, DEFAULT_PALLAS_CHUNK)
 
 
 def sched_geometries(n_cases: int, seed: int) -> list[tuple[int, int]]:
@@ -63,14 +71,43 @@ def stamp_sched_geometry(scenarios: list[Scenario],
             for s, g in zip(scenarios, geoms)]
 
 
+def pallas_chunks(n_cases: int, seed: int) -> list[int]:
+    """Deterministic per-case pallas burst-chunk draws for a fuzz batch.
+
+    The pallas analogue of :func:`sched_geometries`: cases sharing a chunk
+    dispatch together, so a batch costs at most ``len(PALLAS_CHUNK_POOL)``
+    pallas compiles.
+    """
+    rng = np.random.default_rng(np.uint32(seed) ^ np.uint32(0xA77A5))
+    picks = rng.integers(0, len(PALLAS_CHUNK_POOL), n_cases)
+    return [PALLAS_CHUNK_POOL[int(i)] for i in picks]
+
+
+def stamp_pallas_chunk(scenarios: list[Scenario],
+                       sched_seed: int) -> list[Scenario]:
+    """Pin each scenario's drawn burst chunk into ``meta["pallas_chunk"]``.
+
+    Same replayability story as :func:`stamp_sched_geometry`: the draw
+    depends on batch position, so a chunk-dependent failure artifact must
+    carry the chunk it failed at.  Already-stamped scenarios (replayed
+    artifacts) keep theirs.
+    """
+    chunks = pallas_chunks(len(scenarios), sched_seed)
+    return [s if s.meta.get("pallas_chunk") is not None
+            else s.replace(meta={**s.meta, "pallas_chunk": int(ch)})
+            for s, ch in zip(scenarios, chunks)]
+
+
 def run_engine_batch(scenarios: list[Scenario], mode: str,
                      sched_seed: int = 0) -> list[dict]:
     """One compiled ``engine.run_sweep`` call over a padded batch.
 
     ``mode="sched"`` runs each case at its pinned ``meta["sched_geometry"]``
     (falling back to a fresh :func:`sched_geometries` draw seeded by
-    ``sched_seed``) and dispatches one sub-batch per distinct geometry,
-    reassembling results in input order.
+    ``sched_seed``); ``mode="pallas"`` likewise at its pinned
+    ``meta["pallas_chunk"]`` (fallback :func:`pallas_chunks`).  Both
+    dispatch one sub-batch per distinct geometry, reassembling results in
+    input order.
     """
     s0 = scenarios[0]
     for s in scenarios:
@@ -81,15 +118,28 @@ def run_engine_batch(scenarios: list[Scenario], mode: str,
         geoms = [tuple(s.meta["sched_geometry"])
                  if s.meta.get("sched_geometry") is not None else g
                  for s, g in zip(scenarios, draws)]
-        out: list = [None] * len(scenarios)
-        for geom in sorted(set(geoms)):
-            idxs = [i for i, g in enumerate(geoms) if g == geom]
-            sub = _dispatch_batch([scenarios[i] for i in idxs], mode,
-                                  lanes=geom[0], chunk=geom[1])
-            for i, res in zip(idxs, sub):
-                out[i] = res
-        return out
+        return _dispatch_grouped(scenarios, mode, geoms,
+                                 lambda g: dict(lanes=g[0], chunk=g[1]))
+    if mode == "pallas":
+        draws = pallas_chunks(len(scenarios), sched_seed)
+        chunks = [int(s.meta["pallas_chunk"])
+                  if s.meta.get("pallas_chunk") is not None else ch
+                  for s, ch in zip(scenarios, draws)]
+        return _dispatch_grouped(scenarios, mode, chunks,
+                                 lambda ch: dict(chunk=ch))
     return _dispatch_batch(scenarios, mode)
+
+
+def _dispatch_grouped(scenarios, mode, keys, kwargs_of) -> list[dict]:
+    """Dispatch one sub-batch per distinct geometry key, in input order."""
+    out: list = [None] * len(scenarios)
+    for key in sorted(set(keys)):
+        idxs = [i for i, k in enumerate(keys) if k == key]
+        sub = _dispatch_batch([scenarios[i] for i in idxs], mode,
+                              **kwargs_of(key))
+        for i, res in zip(idxs, sub):
+            out[i] = res
+    return out
 
 
 def _dispatch_batch(scenarios: list[Scenario], mode: str,
@@ -170,13 +220,14 @@ def fuzz(scenarios: list[Scenario], modes: tuple = MODES,
          oracle_mutate: tuple = (), sched_seed: int = 0) -> FuzzReport:
     """Differential + invariant sweep over a padded scenario batch.
 
-    ``sched_seed`` seeds the per-case scheduler-geometry draws of the
-    ``"sched"`` mode.  The drawn geometry is stamped into each scenario's
-    meta up front, so a failing case's artifact — and every shrink
-    candidate derived from it — replays at exactly the lane placement
-    that failed.
+    ``sched_seed`` seeds the per-case geometry draws of the ``"sched"``
+    mode (lanes x chunk) and the ``"pallas"`` mode (burst chunk).  The
+    drawn geometry is stamped into each scenario's meta up front, so a
+    failing case's artifact — and every shrink candidate derived from it —
+    replays at exactly the placement that failed.
     """
     scenarios = stamp_sched_geometry(scenarios, sched_seed)
+    scenarios = stamp_pallas_chunk(scenarios, sched_seed)
     engine_outs = {mode: run_engine_batch(scenarios, mode,
                                           sched_seed=sched_seed)
                    for mode in modes}

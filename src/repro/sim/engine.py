@@ -44,23 +44,30 @@ Structure (batched-sweep refactor):
     geometry for the scheduler).  Everything else — program contents, costs,
     waiting-array geometry, horizon — is a traced input, so sweeping any of
     those axes reuses one executable.
-  * :func:`run_sweep` — batched sweep in ONE compiled call, three drivers:
+  * :func:`run_sweep` — batched sweep in ONE compiled call, four drivers:
     ``mode="vmap"`` (lane-parallel, every cell is a lane), ``mode="map"``
-    (sequential cells), and ``mode="sched"`` — a chunked work-stealing lane
+    (sequential cells), ``mode="sched"`` — a chunked work-stealing lane
     scheduler (:func:`_make_run_sched`): ``lanes`` lanes step in fixed-size
     chunks inside an outer while loop, and a lane whose cell finished is
     refilled from the queue of not-yet-started cells.  A skewed sweep then
     costs ~``sum(events)`` lane-steps instead of vmap's ``max(events) × B``,
     while per-cell results stay bit-identical to ``mode="map"`` (each cell
     still executes its private event sequence — only lane placement
-    changes).  Cells with fewer threads than the batch maximum mask the
-    excess threads inactive (``next_time = INF`` forever), which leaves
-    their per-event behaviour bit-identical to an unpadded run.
+    changes).  ``mode="pallas"`` (:mod:`repro.sim.engine_pallas`) fuses the
+    whole per-cell event loop into one Pallas kernel grid step — hot state
+    resident in kernel memory across a ``chunk``-event burst instead of a
+    per-event ``lax.while_loop`` carry; interpret mode on CPU, native on
+    TPU/GPU.  ``mode="auto"`` (:func:`choose_mode`) picks a driver from the
+    backend kind plus the sweep shape.  Cells with fewer threads than the
+    batch maximum mask the excess threads inactive (``next_time = INF``
+    forever), which leaves their per-event behaviour bit-identical to an
+    unpadded run.
 """
 
 from __future__ import annotations
 
 import functools
+import logging
 from typing import NamedTuple
 
 import jax
@@ -73,6 +80,8 @@ from .costs import (DEFAULT_COSTS, I_ATOMIC, I_HIT, I_INV, I_LOCAL, I_MISS,
 from .programs import PROG_LEN, pad_program
 
 INF = np.int32(1 << 29)
+
+log = logging.getLogger(__name__)
 
 # The deterministic event-order contract, shared verbatim with the pure-NumPy
 # reference interpreter (``repro.sim.check.oracle``).  Any change to event
@@ -760,20 +769,28 @@ def _make_run_sched(n_threads: int, mem_words: int, n_locks: int,
 @functools.lru_cache(maxsize=64)
 def _build_engine(n_threads: int, mem_words: int, n_locks: int, prog_len: int,
                   batched: str | None = None, n_lanes: int = 0,
-                  chunk: int = 0):
+                  chunk: int = 0, interpret: bool = False):
     """Compile an engine for a given shape set (everything else is an input).
 
     The cache key is shapes only; ``prog_len`` rides along for cache identity
     even though jit would also specialize on it.  ``batched`` selects the
     sweep driver ("vmap" = lane-parallel, "map" = sequential cells, "sched" =
-    work-stealing lanes, keyed additionally on the ``n_lanes``/``chunk``
-    geometry); either way a sweep is one compile and one dispatch, not one
-    per cell.
+    work-stealing lanes keyed additionally on the ``n_lanes``/``chunk``
+    geometry, "pallas" = the fused-kernel fast path keyed on ``chunk`` and
+    the ``interpret`` flag); either way a sweep is one compile and one
+    dispatch, not one per cell.
     """
     if batched == "sched":
+        assert not interpret, "interpret only applies to mode='pallas'"
         return jax.jit(_make_run_sched(n_threads, mem_words, n_locks,
                                        n_lanes, chunk))
-    assert n_lanes == 0 and chunk == 0, (batched, n_lanes, chunk)
+    if batched == "pallas":
+        from .engine_pallas import make_run_pallas
+        assert n_lanes == 0, (batched, n_lanes)
+        return jax.jit(make_run_pallas(n_threads, mem_words, n_locks,
+                                       prog_len, chunk, interpret))
+    assert n_lanes == 0 and chunk == 0 and not interpret, \
+        (batched, n_lanes, chunk, interpret)
     if batched == "vmap":
         return jax.jit(_make_run_batched(n_threads, mem_words, n_locks))
     if batched == "map":
@@ -891,6 +908,52 @@ def _broadcast_cells(x, n_cells: int, dtype) -> np.ndarray:
 DEFAULT_LANES = 4
 DEFAULT_CHUNK = 512
 
+# mode="auto" thresholds: a sweep is "skewed" when its heaviest cell carries
+# at least twice the mean estimated work and there are enough cells for the
+# work-stealing scheduler to amortize its refill machinery; the pallas fast
+# path requires a cell's resident hot state to fit the kernel-memory budget
+# (VMEM is ~16 MB/core on TPU — half of it, leaving room for double-buffered
+# input blocks).
+AUTO_SKEW_RATIO = 2.0
+AUTO_SKEW_MIN_CELLS = 8
+PALLAS_STATE_BUDGET = 8 << 20
+
+
+def choose_mode(backend: str, *, n_cells: int, n_threads: int,
+                mem_words: int, horizon, n_active=None) -> str:
+    """Pick a sweep driver from the backend kind and the sweep shape.
+
+    The decision surface (all four modes are bit-identical, so this is
+    purely a performance policy):
+
+    * **cpu** — the scalar step sees no SIMD benefit, so sequential
+      ``"map"`` pays exactly ``sum(events)``; a *skewed* sweep (one cell's
+      estimated work ≥ ``AUTO_SKEW_RATIO`` × the mean, with at least
+      ``AUTO_SKEW_MIN_CELLS`` cells) goes to the work-stealing ``"sched"``
+      driver, which keeps lanes busy across the skew.
+    * **tpu/gpu** — the fused-kernel ``"pallas"`` driver removes the
+      per-event dispatch that dominates the XLA loop drivers, provided the
+      per-cell hot state fits the kernel-memory budget
+      (:data:`PALLAS_STATE_BUDGET`); oversized cells fall back to
+      lane-parallel ``"vmap"`` (uniform sweeps) or ``"sched"`` (skewed).
+
+    Work per cell is estimated as ``horizon × n_active`` — the event count
+    is horizon-bound for live cells and padded threads never run.
+    """
+    horizon = np.broadcast_to(np.asarray(horizon, np.int64), (n_cells,))
+    if n_active is None:
+        n_active = n_threads
+    n_active = np.broadcast_to(np.asarray(n_active, np.int64), (n_cells,))
+    est = horizon * n_active
+    skewed = (n_cells >= AUTO_SKEW_MIN_CELLS
+              and est.max() * n_cells >= AUTO_SKEW_RATIO * est.sum())
+    if backend == "cpu":
+        return "sched" if skewed else "map"
+    from .engine_pallas import cell_state_bytes
+    if cell_state_bytes(n_threads, mem_words) > PALLAS_STATE_BUDGET:
+        return "sched" if skewed else "vmap"
+    return "pallas"
+
 
 def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
               init_pc: np.ndarray, init_regs: np.ndarray,
@@ -898,7 +961,8 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
               horizon, max_events=2_000_000, costs=None,
               init_mem: np.ndarray | None = None,
               mode: str = "auto", lanes: int | None = None,
-              chunk: int | None = None) -> dict:
+              chunk: int | None = None, interpret: bool | None = None,
+              live_mem_words=None) -> dict:
     """Run a batch of independent simulations as ONE compiled, vmapped call.
 
     Every per-cell argument carries a leading batch axis of size B; scalars
@@ -924,26 +988,26 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
         with uniform cells), "map" runs them sequentially inside one compiled
         program, "sched" runs a work-stealing lane scheduler (pays
         ~sum(events) like "map" but keeps ``lanes`` cells in flight — the
-        right choice for skewed sweeps), "auto" picks by backend.  Results
-        are bit-identical across all modes.
-      lanes/chunk: scheduler geometry ("sched" only) — number of parallel
-        lanes (clamped to B) and steps per burst between refill checks.
+        right choice for skewed sweeps), "pallas" fuses each cell's whole
+        event loop into one Pallas-kernel grid step (interpret mode on CPU,
+        native on TPU/GPU), "auto" picks by backend kind + sweep shape
+        (:func:`choose_mode`).  Results are bit-identical across all modes.
+      lanes/chunk: driver geometry — ``lanes`` ("sched" only) is the number
+        of parallel work-stealing lanes (clamped to B); ``chunk`` ("sched"
+        and "pallas") is the steps per burst between termination checks.
+      interpret: "pallas" only — force the Pallas interpreter on/off; None
+        autodetects (interpret unless a TPU/GPU backend is present).
+      live_mem_words: optional (B,) per-cell *unpadded* memory sizes, used
+        only for the ``pad_stats`` waste report (defaults to ``mem_words``,
+        i.e. no padding assumed).
 
     Returns a dict of stacked numpy arrays: per-thread stats have shape
     (B, n_threads), scalars (B,), and ``grant_value`` (B, mem_words) holds
-    each cell's final memory.
+    each cell's final memory.  Two bookkeeping keys ride along: ``mode``
+    (the resolved driver, useful under "auto") and ``pad_stats`` — the
+    sweep's padding-waste report (``sum_events``/``max_events`` plus the
+    live thread/program/memory fractions of the padded batch).
     """
-    if mode == "auto":
-        mode = "map" if jax.default_backend() == "cpu" else "vmap"
-    assert mode in ("vmap", "map", "sched"), mode
-    if mode == "sched":
-        lanes = DEFAULT_LANES if lanes is None else lanes
-        chunk = DEFAULT_CHUNK if chunk is None else chunk
-        assert lanes >= 1 and chunk >= 1, (lanes, chunk)
-    else:
-        assert lanes is None and chunk is None, \
-            f"lanes/chunk only apply to mode='sched', got mode={mode!r}"
-        lanes = chunk = 0
     programs = np.asarray(programs, np.int32)
     assert programs.ndim == 3 and programs.shape[2] == 5, programs.shape
     n_cells, prog_len = programs.shape[0], programs.shape[1]
@@ -952,6 +1016,36 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
     n_threads = init_pc.shape[1]
     assert init_pc.shape == (n_cells, n_threads)
     assert init_regs.shape[:2] == (n_cells, n_threads)
+
+    if mode == "auto":
+        backend = jax.default_backend()
+        mode = choose_mode(backend, n_cells=n_cells, n_threads=n_threads,
+                           mem_words=mem_words, horizon=horizon,
+                           n_active=n_active)
+        log.info("run_sweep mode='auto' -> %r (backend=%s, B=%d, "
+                 "n_threads=%d, mem_words=%d)", mode, backend, n_cells,
+                 n_threads, mem_words)
+    assert mode in ("vmap", "map", "sched", "pallas"), mode
+    if mode == "sched":
+        lanes = DEFAULT_LANES if lanes is None else lanes
+        chunk = DEFAULT_CHUNK if chunk is None else chunk
+        assert lanes >= 1 and chunk >= 1, (lanes, chunk)
+    elif mode == "pallas":
+        from ..kernels import resolve_interpret
+        from .engine_pallas import DEFAULT_PALLAS_CHUNK
+        assert lanes is None, "lanes only applies to mode='sched'"
+        lanes = 0
+        chunk = DEFAULT_PALLAS_CHUNK if chunk is None else chunk
+        assert chunk >= 1, chunk
+        interpret = resolve_interpret(interpret)
+    else:
+        assert lanes is None and chunk is None, \
+            f"lanes/chunk only apply to mode='sched'/'pallas', " \
+            f"got mode={mode!r}"
+        lanes = chunk = 0
+    if mode != "pallas":
+        assert interpret is None, "interpret only applies to mode='pallas'"
+        interpret = False
 
     wa_size_arr = _broadcast_cells(wa_size, n_cells, np.int32)
     assert (wa_size_arr & (wa_size_arr - 1) == 0).all(), "wa_size must be pow2"
@@ -967,11 +1061,13 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
     init_mem = np.asarray(init_mem, np.int32)
     assert init_mem.shape == (n_cells, mem_words), init_mem.shape
 
+    n_active_arr = _broadcast_cells(n_active, n_cells, np.int32)
     engine = _build_engine(n_threads, mem_words, n_locks, prog_len,
-                           batched=mode, n_lanes=lanes, chunk=chunk)
+                           batched=mode, n_lanes=lanes, chunk=chunk,
+                           interpret=interpret)
     out = engine(jnp.asarray(programs), jnp.asarray(init_pc),
                  jnp.asarray(init_regs), jnp.asarray(init_mem),
-                 jnp.asarray(_broadcast_cells(n_active, n_cells, np.int32)),
+                 jnp.asarray(n_active_arr),
                  jnp.asarray(_broadcast_cells(seeds, n_cells, np.uint32)),
                  jnp.asarray(_broadcast_cells(horizon, n_cells, np.int32)),
                  jnp.asarray(_broadcast_cells(max_events, n_cells, np.int32)),
@@ -979,4 +1075,39 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
                  jnp.asarray(_broadcast_cells(wa_base, n_cells, np.int32)),
                  jnp.asarray(wa_size_arr - 1),
                  jnp.asarray(wa_size_arr))
-    return {k: np.asarray(v) for k, v in out.items()}
+    res = {k: np.asarray(v) for k, v in out.items()}
+    res["mode"] = mode
+    res["pad_stats"] = _pad_stats(
+        programs, n_active_arr, n_threads, res["events"],
+        _broadcast_cells(mem_words if live_mem_words is None
+                         else live_mem_words, n_cells, np.int64), mem_words)
+    return res
+
+
+def _pad_stats(programs: np.ndarray, n_active: np.ndarray, n_threads: int,
+               events: np.ndarray, live_mem: np.ndarray,
+               mem_words: int) -> dict:
+    """Padding-waste report for one sweep dispatch.
+
+    Batched cells are padded to shared shapes, and the padding is pure
+    overhead the drivers carry: inactive threads still occupy rows in every
+    per-thread gather/scatter, padded program rows occupy the instruction
+    table, padded memory words occupy hot state (and sharer-bitset lines).
+    ``bench_engine`` and fuzz runs report these fractions so packer
+    regressions are visible instead of silently eaten as wall-clock.
+    """
+    from .isa import HALT
+    n_cells, prog_len = programs.shape[0], programs.shape[1]
+    # live program rows: everything up to the last row that is not the
+    # canonical (HALT, 0, 0, 0, 0) pad row pad_program appends
+    pad_row = (programs[:, :, 0] == HALT) & (programs[:, :, 1:] == 0).all(-1)
+    live = ~pad_row
+    live_rows = np.where(live.any(axis=1),
+                         prog_len - np.argmax(live[:, ::-1], axis=1), 0)
+    return {
+        "sum_events": int(events.sum()),
+        "max_events": int(events.max()) if n_cells else 0,
+        "live_thread_frac": float(n_active.sum() / (n_cells * n_threads)),
+        "live_prog_frac": float(live_rows.sum() / (n_cells * prog_len)),
+        "live_mem_frac": float(live_mem.sum() / (n_cells * mem_words)),
+    }

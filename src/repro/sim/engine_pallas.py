@@ -1,0 +1,168 @@
+"""Pallas fast path for the lockVM sweep engine (``mode="pallas"``).
+
+The map/vmap/sched drivers in :mod:`repro.sim.engine` all round-trip the
+full :class:`~repro.sim.engine.SimState` through a ``lax.while_loop`` carry
+once per *event*: every single-event step is a host-visible XLA loop
+iteration, so the per-step dispatch and carry traffic dominate wall-clock
+on wide devices.  This module instead runs the single-event step — the
+fused argmin event selection over ``[pending-commit times | thread
+next_time]``, the opcode switch producing a compact ``Effects`` record,
+and the packed-bitset sharer update — *inside* one ``pallas_call``: the
+grid is one step per sweep cell, each grid step loads that cell's whole
+hot state (``SimState`` arrays including the ``(n_lines, ceil(T/32))
+uint32`` sharer bitsets) into kernel memory once, executes events in
+``chunk``-sized bursts (an in-kernel ``fori_loop`` inside a termination
+``while_loop``) and writes only the final stats back out.  State lives in
+kernel-resident buffers across the whole burst instead of being carried
+through an XLA loop boundary per event.
+
+Bit-identity is by construction, not by parallel reimplementation: the
+kernel body calls the very same :func:`repro.sim.engine._step` transition
+the other three drivers use, so :data:`repro.sim.engine.
+EVENT_ORDER_CONTRACT` — commit-wins tie-break, int32 wrap semantics,
+collision counters, everything — holds verbatim.  The self-guarding step
+(a cell past its horizon/event budget dispatches the no-event pseudo-op)
+makes burst overshoot free: running up to ``chunk - 1`` extra steps after
+termination is an exact identity, so per-cell results match ``mode="map"``
+bit for bit.  The differential fuzzer (``repro.sim.check``) diffs this
+driver against the NumPy oracle alongside the other modes.
+
+Backend story: with ``interpret=True`` (the CPU default via
+:func:`repro.kernels.default_interpret`) the kernel is discharged to
+ordinary XLA and serves as the correctness reference; on a TPU/GPU backend
+``interpret=False`` lowers natively.  Cells execute one grid step each —
+sequential on TPU grids (so a skewed sweep costs ~``sum(events)`` like
+``mode="map"``, *without* per-event dispatch), parallel blocks on GPU.
+Per-cell hot state must fit kernel memory (~16 MB VMEM on TPU);
+:func:`cell_state_bytes` is the estimate ``mode="auto"`` uses to fall back
+to vmap/sched for oversized cells.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import isa
+from .engine import INF, SimConsts, _initial_state, _step, bitset_words
+
+# Events per in-kernel burst between termination checks.  The burst loop
+# costs ``ceil(events / chunk) * chunk`` steps per cell (overshoot steps are
+# identity no-events), so the waste is bounded by ``chunk - 1`` steps per
+# cell while the termination reduction is amortized over ``chunk`` events.
+DEFAULT_PALLAS_CHUNK = 128
+
+# Result keys, in kernel-output order (the engine's sweep-output contract).
+OUT_KEYS = ("acquisitions", "waited_acquisitions", "handover_sum",
+            "handover_count", "events", "sleeping", "grant_value")
+
+
+def cell_state_bytes(n_threads: int, mem_words: int) -> int:
+    """Bytes of per-cell hot state the kernel keeps resident during a burst.
+
+    Everything in :class:`SimState`: memory, packed sharer bitsets + dirty
+    owners per line, and the eight per-thread int32 rows plus the register
+    file.  ``mode="auto"`` compares this against the kernel-memory budget
+    before picking the pallas driver.
+    """
+    n_lines = mem_words // isa.WORDS_PER_SECTOR
+    words = (mem_words
+             + n_lines * (bitset_words(n_threads) + 1)
+             + n_threads * (8 + isa.N_REGS))
+    return 4 * words
+
+
+def make_run_pallas(n_threads: int, mem_words: int, n_locks: int,
+                    prog_len: int, chunk: int, interpret: bool):
+    """Build the ``mode="pallas"`` sweep driver for one shape set.
+
+    Same signature as the other ``_make_run_*`` drivers: the returned
+    function takes the batched sweep arrays (leading axis B) and returns
+    the stacked per-cell stats dict.  ``chunk`` and ``interpret`` are
+    compile-time constants (part of the ``_build_engine`` cache key).
+    """
+    assert chunk >= 1, chunk
+    n_lines = mem_words // isa.WORDS_PER_SECTOR
+    assert n_lines * isa.WORDS_PER_SECTOR == mem_words, mem_words
+
+    def kernel(program_ref, init_pc_ref, init_regs_ref, init_mem_ref,
+               n_active_ref, seed_ref, horizon_ref, max_events_ref,
+               costs_ref, wa_base_ref, wa_mask_ref, wa_size_ref,
+               acq_ref, wacq_ref, hs_ref, hc_ref, ev_ref, slp_ref, mem_ref):
+        """One grid step = one sweep cell, start to finish.
+
+        Refs hold this cell's (1, ...) blocks; indexing row 0 materializes
+        the cell's state in kernel memory, where the whole event burst runs
+        before the final stats are stored back.
+        """
+        c = SimConsts(program=program_ref[0], costs=costs_ref[0],
+                      wa_base=wa_base_ref[0], wa_mask=wa_mask_ref[0],
+                      wa_size=wa_size_ref[0], horizon=horizon_ref[0],
+                      max_events=max_events_ref[0])
+        s0 = _initial_state(n_threads, mem_words, n_locks,
+                            init_pc_ref[0], init_regs_ref[0],
+                            init_mem_ref[0], n_active_ref[0], seed_ref[0])
+
+        def live(s):
+            # exactly the single-cell driver's loop condition
+            t_th = jnp.min(s.next_time)
+            t_cm = jnp.min(jnp.where(s.pend_addr >= 0, s.pend_time, INF))
+            return (s.events < c.max_events) & \
+                (jnp.minimum(t_th, t_cm) < c.horizon)
+
+        def burst(s):
+            return jax.lax.fori_loop(0, chunk, lambda _, st: _step(c, st), s)
+
+        s = jax.lax.while_loop(live, burst, s0)
+        acq_ref[0] = s.acq
+        wacq_ref[0] = s.waited_acq
+        hs_ref[0] = s.hand_sum
+        hc_ref[0] = s.hand_cnt
+        ev_ref[0] = s.events
+        slp_ref[0] = (s.spin_addr >= 0).sum().astype(jnp.int32)
+        mem_ref[0] = s.mem
+
+    def run(program, init_pc, init_regs, init_mem, n_active, seed,
+            horizon, max_events, costs, wa_base, wa_mask, wa_size):
+        n_cells = program.shape[0]
+        cell1 = lambda i: (i,)          # noqa: E731 - tiny index maps
+        cell2 = lambda i: (i, 0)        # noqa: E731
+        cell3 = lambda i: (i, 0, 0)     # noqa: E731
+        scalar = pl.BlockSpec((1,), cell1)
+        i32 = jnp.int32
+        out = pl.pallas_call(
+            kernel,
+            grid=(n_cells,),
+            in_specs=[
+                pl.BlockSpec((1, prog_len, 5), cell3),     # program
+                pl.BlockSpec((1, n_threads), cell2),       # init_pc
+                pl.BlockSpec((1, n_threads, isa.N_REGS), cell3),  # init_regs
+                pl.BlockSpec((1, mem_words), cell2),       # init_mem
+                scalar, scalar, scalar, scalar,            # n_active, seed,
+                #                                            horizon, max_ev
+                pl.BlockSpec((1, 9), cell2),               # costs
+                scalar, scalar, scalar,                    # wa_base/mask/size
+            ],
+            out_specs=[
+                pl.BlockSpec((1, n_threads), cell2),       # acquisitions
+                pl.BlockSpec((1, n_threads), cell2),       # waited
+                scalar, scalar, scalar, scalar,            # hand_sum/cnt,
+                #                                            events, sleeping
+                pl.BlockSpec((1, mem_words), cell2),       # grant_value
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((n_cells, n_threads), i32),
+                jax.ShapeDtypeStruct((n_cells, n_threads), i32),
+                jax.ShapeDtypeStruct((n_cells,), i32),
+                jax.ShapeDtypeStruct((n_cells,), i32),
+                jax.ShapeDtypeStruct((n_cells,), i32),
+                jax.ShapeDtypeStruct((n_cells,), i32),
+                jax.ShapeDtypeStruct((n_cells, mem_words), i32),
+            ],
+            interpret=interpret,
+        )(program, init_pc, init_regs, init_mem, n_active, seed,
+          horizon, max_events, costs, wa_base, wa_mask, wa_size)
+        return dict(zip(OUT_KEYS, out))
+
+    return run

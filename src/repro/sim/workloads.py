@@ -106,17 +106,21 @@ class SweepSpec:
 
 
 def run_sweep(spec: SweepSpec, *, mode: str = "auto",
-              lanes: int | None = None, chunk: int | None = None) -> list[dict]:
+              lanes: int | None = None, chunk: int | None = None,
+              interpret: bool | None = None) -> list[dict]:
     """Run every cell of ``spec`` in one compiled call.
 
     Returns one dict per cell, in :meth:`SweepSpec.cells` order.  Each dict
     carries the cell coordinates (``lock``, ``n_threads``, ``seed``,
     ``cs_work``, ``private_arrays``) plus the same stats ``run_sim``
     produces (``throughput``, ``acquisitions``, ``avg_handover``, ``mem``,
-    ...), with per-thread arrays sliced to the cell's real thread count.
-    ``mode`` selects the batched execution strategy (see
-    :func:`repro.sim.engine.run_sweep`; ``lanes``/``chunk`` configure the
-    ``"sched"`` work-stealing driver); results are mode-independent.
+    ...), with per-thread arrays sliced to the cell's real thread count,
+    plus the sweep-wide ``mode`` (the resolved driver) and ``pad_stats``
+    (padding-waste report) bookkeeping.  ``mode`` selects the batched
+    execution strategy (see :func:`repro.sim.engine.run_sweep`; the default
+    ``"auto"`` picks per backend + sweep shape; ``lanes``/``chunk``
+    configure the ``"sched"`` work-stealing driver, ``chunk``/``interpret``
+    the ``"pallas"`` fused kernel); results are mode-independent.
     """
     cells = spec.cells()
     built = []
@@ -147,7 +151,9 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
         costs=np.stack([cell.costs.to_array() for cell in cells]),
         init_mem=np.stack([pad_mem(init_mem, m_max)
                            for *_, init_mem in built]),
-        mode=mode, lanes=lanes, chunk=chunk,
+        mode=mode, lanes=lanes, chunk=chunk, interpret=interpret,
+        live_mem_words=np.asarray([layout.mem_words
+                                   for layout, *_ in built]),
     )
 
     results = []
@@ -170,6 +176,8 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
             "sleeping": raw["sleeping"][i],
             "mem": raw["grant_value"][i, :layout.mem_words],
             "horizon": spec.horizon,
+            "mode": raw["mode"],          # resolved driver (mode="auto")
+            "pad_stats": raw["pad_stats"],  # sweep-wide padding waste
         }
         res["throughput"] = float(res["acquisitions"].sum()) / spec.horizon
         hc = int(res["handover_count"])
@@ -235,7 +243,8 @@ def pack_engine_cells(cells, *, cs_work: int = 4, ncs_max: int = 200,
         wa_base=np.asarray([layout.wa_base for layout in layouts]),
         wa_size=np.asarray([layout.wa_size for layout in layouts]),
         horizon=np.asarray([h for *_, h in cells], np.int32),
-        init_mem=np.stack(mems))
+        init_mem=np.stack(mems),
+        live_mem_words=np.asarray([layout.mem_words for layout in layouts]))
 
 
 def run_contention(lock: str, n_threads: int, *, cs_work: int = 4,

@@ -4,9 +4,9 @@ regression cases.
 Two families, distinguished by the expected-class pin each entry carries:
   * ``diff_*``: scenarios historically shrunk under an injected oracle
     mutation (store visibility, lost wakeups, free invalidation).  On the
-    correct engine they must replay with ZERO problems across all three
-    sweep modes — they pin exactly the engine behaviours those mutations
-    would break.
+    correct engine they must replay with ZERO problems across all four
+    sweep modes (``pallas`` in interpret mode) — they pin exactly the
+    engine behaviours those mutations would break.
   * ``inv_*``: deliberately broken lock programs.  The checker must KEEP
     reporting the recorded invariant classes — they pin the checker's own
     sensitivity (one historical shrunk case per invariant class:
@@ -21,7 +21,8 @@ import os
 
 import pytest
 
-from repro.sim.check import case_problems, failure_classes, load_scenario
+from repro.sim.check import (MODES, case_problems, failure_classes,
+                             load_scenario)
 
 CORPUS_DIR = os.path.join(os.path.dirname(__file__), "corpus")
 CORPUS = sorted(glob.glob(os.path.join(CORPUS_DIR, "*.npz")))
@@ -46,6 +47,6 @@ def test_corpus_is_present_and_covers_all_invariant_classes():
 def test_corpus_replay(path):
     scenario = load_scenario(path)
     expect = set(scenario.meta.get("expect_classes", []))
-    problems = case_problems(scenario, modes=("map", "vmap", "sched"))
+    problems = case_problems(scenario, modes=MODES)
     got = failure_classes(problems)
     assert got == expect, (problems[:4], expect)
