@@ -15,23 +15,68 @@ reproducible from the run id.
 ``--mutate <name>`` injects a known oracle bug (see
 ``oracle.ORACLE_MUTATIONS``) — the run then MUST fail; this is the
 self-test that proves the checker can catch what it claims to catch.
+
+Fuzz-scale switches:
+
+  * ``--batch-oracle``    — run the oracle side through the vectorized
+    batch oracle (bit-identical, ~50-100x the cases/sec).
+  * ``--steer``           — coverage-guided generation: signature-novel
+    cases are promoted into a pool and mutated in preference to uniform
+    redraw (implies ``--batch-oracle``).
+  * ``--coverage-report`` — write the run-level coverage map (report +
+    signatures) as JSON; the nightly lane uploads it as an artifact.
+  * ``--corpus-out``      — write every promoted pool scenario as a
+    replayable ``.npz`` (the nightly's expanded-corpus artifact).
+  * ``--replay``          — a ``.npz`` file replays one case; a directory
+    replays every entry as padded batches (one engine dispatch per mode
+    per shape group) and checks each against its ``expect_classes`` pin.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import os
 import sys
 import time
 
-from . import (MODES, count_instructions, fuzz, generate_batch,
-               load_scenario, save_scenario, shrink)
+from . import (MODES, count_instructions, failure_classes, fuzz,
+               generate_batch, load_scenario, replay_corpus, save_scenario,
+               shrink, steer)
 
 
 def _resolve_seed(spec: str) -> int:
     if spec == "from-run-id":
         return int(os.environ.get("GITHUB_RUN_ID", "0")) & 0x7FFFFFFF
     return int(spec)
+
+
+def _replay(args, modes, mutate) -> int:
+    """Replay a corpus entry (file) or a whole corpus (directory)."""
+    if os.path.isdir(args.replay):
+        paths = sorted(glob.glob(os.path.join(args.replay, "*.npz")))
+    else:
+        paths = [args.replay]
+    if not paths:
+        print(f"no .npz entries under {args.replay}")
+        return 2
+    t0 = time.time()
+    problems = replay_corpus(paths, modes=modes, oracle_mutate=mutate,
+                             batch_oracle=args.batch_oracle)
+    bad = 0
+    for path, probs in zip(paths, problems):
+        expect = set(load_scenario(path).meta.get("expect_classes", []))
+        got = failure_classes(probs)
+        status = "ok" if got == expect else "MISMATCH"
+        bad += status != "ok"
+        print(f"  {os.path.basename(path)}: expect={sorted(expect)} "
+              f"got={sorted(got)} {status}")
+        if status != "ok":
+            for p in probs[:4]:
+                print(f"    {p}")
+    print(f"replayed {len(paths)} entries in {time.time() - t0:.1f}s, "
+          f"{bad} mismatching")
+    return 1 if bad else 0
 
 
 def main(argv=None) -> int:
@@ -47,27 +92,71 @@ def main(argv=None) -> int:
     ap.add_argument("--mutate", default="",
                     help="inject a named oracle bug (self-test: must fail)")
     ap.add_argument("--replay", default="",
-                    help="replay one corpus .npz instead of generating")
+                    help="replay a corpus .npz (or a directory of them) "
+                         "instead of generating")
     ap.add_argument("--no-shrink", action="store_true")
+    ap.add_argument("--batch-oracle", action="store_true",
+                    help="vectorized batch oracle for the oracle side")
+    ap.add_argument("--steer", action="store_true",
+                    help="coverage-guided generation (implies "
+                         "--batch-oracle)")
+    ap.add_argument("--batch-size", type=int, default=256,
+                    help="cases per steering round (with --steer)")
+    ap.add_argument("--coverage-report", default="",
+                    help="write the coverage map as JSON here")
+    ap.add_argument("--corpus-out", default="",
+                    help="write promoted (coverage-novel) scenarios here "
+                         "(with --steer)")
     args = ap.parse_args(argv)
 
     seed = _resolve_seed(args.seed)
     modes = tuple(m for m in args.modes.split(",") if m)
     mutate = tuple(m for m in args.mutate.split(",") if m)
 
-    t0 = time.time()
     if args.replay:
-        scenarios = [load_scenario(args.replay)]
         print(f"replaying {args.replay}")
+        return _replay(args, modes, mutate)
+
+    t0 = time.time()
+    coverage = None
+    if args.steer:
+        res = steer(args.cases, seed, modes=modes,
+                    batch_size=args.batch_size)
+        report, coverage = res.report, res.coverage
+        print(f"steered {report.n_cases} cases (seed={seed}): "
+              f"{len(res.pool)} promoted, {res.n_mutants} mutants, "
+              f"{coverage.n_signatures} signatures")
+        if args.corpus_out and res.pool:
+            os.makedirs(args.corpus_out, exist_ok=True)
+            for i, s in enumerate(res.pool):
+                save_scenario(
+                    os.path.join(args.corpus_out,
+                                 f"steer_seed{seed}_{i:05d}.npz"),
+                    s, note=f"coverage-promoted (steer seed={seed})")
+            print(f"wrote {len(res.pool)} promoted cases to "
+                  f"{args.corpus_out}")
     else:
+        if args.coverage_report and args.batch_oracle:
+            from .coverage import CoverageMap
+            coverage = CoverageMap()
         scenarios = generate_batch(args.cases, seed)
         print(f"generated {len(scenarios)} scenarios (seed={seed})")
-    report = fuzz(scenarios, modes=modes, oracle_mutate=mutate,
-                  sched_seed=seed)
+        report = fuzz(scenarios, modes=modes, oracle_mutate=mutate,
+                      sched_seed=seed, batch_oracle=args.batch_oracle,
+                      coverage=coverage)
     dt = time.time() - t0
     print(report.summary())
     print(f"elapsed {dt:.1f}s "
-          f"({report.total_events / max(dt, 1e-9):,.0f} oracle events/s)")
+          f"({report.total_events / max(dt, 1e-9):,.0f} oracle events/s, "
+          f"{report.n_cases / max(dt, 1e-9):,.1f} cases/s)")
+    if args.coverage_report and coverage is not None:
+        coverage.save(args.coverage_report)
+        rep = coverage.report()
+        print(f"coverage: {rep['n_signatures']} signatures over "
+              f"{rep['n_cases']} cases -> {args.coverage_report}")
+        if rep["opcodes_never_executed"]:
+            print(f"  opcodes never executed: "
+                  f"{','.join(rep['opcodes_never_executed'])}")
 
     if report.ok:
         if mutate:

@@ -380,6 +380,59 @@ def gen_composed_scenario(rng: np.random.Generator,
     )
 
 
+def mutate_scenario(scenario: Scenario, rng: np.random.Generator,
+                    n_mutations: int = 1) -> Scenario:
+    """Coverage-steering mutation: perturb a promoted case, NEVER its program.
+
+    The program (and with it the layout/addresses it was generated against)
+    is what made the case's coverage signature novel; the mutations search
+    the *neighbourhood* of that behaviour — PRNG seed, coherence costs,
+    horizon, active-thread count (reduce-only, so the probed layout stays an
+    upper bound for every invariant), the pinned scheduler/pallas placement,
+    and — for ticket-family locks — re-seeding the ticket/grant counters
+    just below ``INT32_MAX`` so the mutant crosses the wrap even if its
+    parent did not.
+    """
+    # deferred import: runner imports generate at module level
+    from .runner import PALLAS_CHUNK_POOL, SCHED_GEOMETRY_POOL
+    s = scenario
+    ops = ["seed", "costs", "horizon", "sched_geometry", "pallas_chunk"]
+    if s.n_active > 2:
+        ops.append("n_active")
+    if s.kind == "composed" and s.lock in WRAP_SEED_LOCKS:
+        ops.append("ticket_base")
+    for _ in range(max(1, n_mutations)):
+        op = str(rng.choice(ops))
+        if op == "seed":
+            s = s.replace(seed=int(rng.integers(1, 2**31 - 1)))
+        elif op == "costs":
+            s = s.replace(costs=gen_costs(rng))
+        elif op == "horizon":
+            s = s.replace(horizon=int(rng.integers(1_500, 4_000)))
+        elif op == "n_active":
+            if s.n_active > 2:  # an earlier mutation may have hit the floor
+                s = s.replace(n_active=int(rng.integers(2, s.n_active)))
+        elif op == "sched_geometry":
+            g = SCHED_GEOMETRY_POOL[
+                int(rng.integers(len(SCHED_GEOMETRY_POOL)))]
+            s = s.replace(meta={**s.meta, "sched_geometry": list(g)})
+        elif op == "pallas_chunk":
+            ch = PALLAS_CHUNK_POOL[int(rng.integers(len(PALLAS_CHUNK_POOL)))]
+            s = s.replace(meta={**s.meta, "pallas_chunk": int(ch)})
+        else:  # ticket_base: same words gen_composed_scenario itself seeds
+            tb = int(INT32_MAX - rng.integers(0, 12))
+            init_mem = np.asarray(s.init_mem).copy()
+            n_locks = s.meta["layout"]["n_locks"]
+            for base in range(0, n_locks * LOCK_STRIDE, LOCK_STRIDE):
+                init_mem[base + OFF_TICKET] = tb
+                init_mem[base + OFF_GRANT] = tb
+                if s.lock == "tkt-dual":
+                    init_mem[base + OFF_LGRANT] = tb
+            s = s.replace(init_mem=init_mem,
+                          meta={**s.meta, "ticket_base": tb})
+    return s
+
+
 def generate_batch(n_cases: int, seed: int,
                    composed_fraction: float = 0.6) -> list[Scenario]:
     """A deterministic mixed batch: ``composed_fraction`` of the cases wrap

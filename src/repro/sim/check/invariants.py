@@ -239,6 +239,31 @@ def check_collisions(scenario, mem: np.ndarray) -> list[str]:
     return problems
 
 
+def active_classes(scenario) -> tuple[str, ...]:
+    """Invariant classes whose gate this scenario passes (sorted).
+
+    Mirrors the early-return guards of the ``check_*`` functions above —
+    the coverage layer keys its lock x invariant-class histogram on this,
+    so a steered corpus can be audited for *which* semantics it actually
+    exercises, not just which locks it runs.  ``differential`` (oracle ==
+    engine on every stat) applies to every case and is included for all.
+    """
+    meta = scenario.meta
+    classes = ["differential"]
+    if meta.get("probed"):
+        classes.append("exclusion")
+    fissile = meta.get("fissile", False)
+    if meta.get("ticket_fifo") or scenario.lock == "twa-sem" or fissile:
+        classes.append("conservation")
+    if meta.get("ticket_fifo"):
+        classes += ["fifo", "liveness"]
+    if scenario.kind == "composed":
+        classes += ["deadlock", "progress"]
+    if meta.get("count_collisions"):
+        classes.append("collision")
+    return tuple(sorted(classes))
+
+
 def check_invariants(scenario, stats: dict, trace: Trace) -> list[str]:
     """All invariant violations for one oracle run (empty list = pass)."""
     mem = np.asarray(stats["grant_value"])

@@ -17,6 +17,7 @@ import numpy as np
 
 from .. import engine
 from ..engine_pallas import DEFAULT_PALLAS_CHUNK
+from .batch_oracle import run_batch_oracle
 from .generate import Scenario
 from .invariants import check_invariants
 from .oracle import Trace, run_oracle
@@ -201,6 +202,7 @@ class FuzzReport:
     n_cases: int
     total_events: int = 0
     failures: list = field(default_factory=list)  # (index, scenario, [msgs])
+    novel: list = field(default_factory=list)     # coverage-novel indices
 
     @property
     def ok(self) -> bool:
@@ -217,7 +219,8 @@ class FuzzReport:
 
 
 def fuzz(scenarios: list[Scenario], modes: tuple = MODES,
-         oracle_mutate: tuple = (), sched_seed: int = 0) -> FuzzReport:
+         oracle_mutate: tuple = (), sched_seed: int = 0,
+         batch_oracle: bool = False, coverage=None) -> FuzzReport:
     """Differential + invariant sweep over a padded scenario batch.
 
     ``sched_seed`` seeds the per-case geometry draws of the ``"sched"``
@@ -225,6 +228,14 @@ def fuzz(scenarios: list[Scenario], modes: tuple = MODES,
     drawn geometry is stamped into each scenario's meta up front, so a
     failing case's artifact — and every shrink candidate derived from it —
     replays at exactly the placement that failed.
+
+    ``batch_oracle=True`` runs the oracle side through
+    :func:`run_batch_oracle` (one vectorized pass instead of B sequential
+    interpreter runs) — the checks, mutations and failure reports are
+    unchanged because the batch oracle is bit-identical to the sequential
+    one.  With a :class:`~repro.sim.check.coverage.CoverageMap` passed as
+    ``coverage`` (batch oracle only), per-case coverage is folded into the
+    map and the indices of signature-novel cases land in ``report.novel``.
     """
     scenarios = stamp_sched_geometry(scenarios, sched_seed)
     scenarios = stamp_pallas_chunk(scenarios, sched_seed)
@@ -232,14 +243,128 @@ def fuzz(scenarios: list[Scenario], modes: tuple = MODES,
                                           sched_seed=sched_seed)
                    for mode in modes}
     report = FuzzReport(n_cases=len(scenarios))
+    if batch_oracle:
+        bres = run_batch_oracle(scenarios, mutate=oracle_mutate,
+                                collect_trace=True,
+                                collect_coverage=coverage is not None)
+        oracle_runs = list(zip(bres.stats, bres.traces))
+        if coverage is not None:
+            report.novel = coverage.add_batch(scenarios, bres)
+    else:
+        assert coverage is None, "coverage feedback needs batch_oracle=True"
+        oracle_runs = [run_oracle_case(s, mutate=oracle_mutate)
+                       for s in scenarios]
     for i, scenario in enumerate(scenarios):
-        oracle_out, trace = run_oracle_case(scenario, mutate=oracle_mutate)
+        oracle_out, trace = oracle_runs[i]
         report.total_events += int(oracle_out["events"])
         problems = check_case(scenario, oracle_out, trace,
                               {m: outs[i] for m, outs in engine_outs.items()})
         if problems:
             report.failures.append((i, scenario, problems))
     return report
+
+
+@dataclass
+class SteerResult:
+    """Outcome of a coverage-steered fuzz run."""
+
+    report: FuzzReport      # aggregated over every round (global indices)
+    coverage: object        # the CoverageMap after all rounds
+    pool: list              # promoted (coverage-novel) scenarios
+    n_mutants: int = 0      # cases produced by mutation rather than redraw
+
+
+def steer(n_cases: int, seed: int, modes: tuple = MODES,
+          coverage=None, pool: list | None = None, batch_size: int = 256,
+          mutate_fraction: float = 0.5, pool_cap: int = 512,
+          composed_fraction: float = 0.6) -> SteerResult:
+    """Coverage-guided fuzzing: novel cases are promoted and mutated.
+
+    Runs ``n_cases`` through :func:`fuzz` (batch oracle + coverage) in
+    rounds of ``batch_size``.  Cases whose coverage signature is new to the
+    map are promoted into ``pool``; once the pool is non-empty, each round
+    draws ``mutate_fraction`` of its cases by mutating pool members
+    (:func:`~repro.sim.check.generate.mutate_scenario` — geometry, seeds,
+    costs, ticket wrap seeding, scheduler placement; never the program) in
+    preference to uniform redraw.  The pool is FIFO-capped at ``pool_cap``
+    so long runs keep mutating *recent* frontier cases.
+
+    Passing an existing ``coverage`` map (e.g. loaded from a previous
+    nightly's artifact) makes novelty judgments cumulative across runs.
+    """
+    from .coverage import CoverageMap
+    from .generate import generate_batch, mutate_scenario
+    coverage = coverage if coverage is not None else CoverageMap()
+    pool = list(pool) if pool else []
+    rng = np.random.default_rng(np.uint32(seed) ^ np.uint32(0x57EE2))
+    out = SteerResult(report=FuzzReport(n_cases=0), coverage=coverage,
+                      pool=pool)
+    done = 0
+    for round_i in range(1 << 30):
+        if done >= n_cases:
+            break
+        n = min(batch_size, n_cases - done)
+        n_mut = min(int(round(n * mutate_fraction)), n) if pool else 0
+        batch = [mutate_scenario(pool[int(rng.integers(len(pool)))], rng,
+                                 n_mutations=int(rng.integers(1, 4)))
+                 for _ in range(n_mut)]
+        batch += generate_batch(n - n_mut,
+                                seed=int((np.uint32(seed)
+                                          + np.uint32(7919 * round_i))
+                                         & np.uint32(0x7FFFFFFF)),
+                                composed_fraction=composed_fraction)
+        # stamp before fuzz so promoted scenarios carry their placement
+        # pins (fuzz re-stamps idempotently)
+        batch = stamp_sched_geometry(batch, seed + round_i)
+        batch = stamp_pallas_chunk(batch, seed + round_i)
+        sub = fuzz(batch, modes=modes, sched_seed=seed + round_i,
+                   batch_oracle=True, coverage=coverage)
+        pool.extend(batch[i] for i in sub.novel)
+        if len(pool) > pool_cap:
+            del pool[: len(pool) - pool_cap]
+        out.report.failures += [(done + i, s, msgs)
+                                for i, s, msgs in sub.failures]
+        out.report.novel += [done + i for i in sub.novel]
+        out.report.total_events += sub.total_events
+        out.report.n_cases += sub.n_cases
+        out.n_mutants += n_mut
+        done += n
+    return out
+
+
+def replay_corpus(paths, modes: tuple = MODES, oracle_mutate: tuple = (),
+                  batch_oracle: bool = True) -> list[list[str]]:
+    """Replay corpus entries as padded batches: ``problems`` per path.
+
+    Entries are grouped by their padded shapes and each group costs ONE
+    engine dispatch per mode (plus one geometry sub-batch per distinct
+    pinned placement) instead of one dispatch per entry — the same batching
+    a fresh fuzz run gets.  The oracle side runs through the batch oracle
+    by default (sequential fallback still applies per case).
+    """
+    scens = [load_scenario(p) for p in paths]
+    results: list = [None] * len(paths)
+    groups: dict[tuple, list[int]] = {}
+    for i, s in enumerate(scens):
+        key = (s.n_threads, s.mem_words, s.n_locks,
+               int(np.asarray(s.program).shape[0]))
+        groups.setdefault(key, []).append(i)
+    for key in sorted(groups):
+        idxs = groups[key]
+        batch = [scens[i] for i in idxs]
+        engine_outs = {m: run_engine_batch(batch, m) for m in modes}
+        if batch_oracle:
+            bres = run_batch_oracle(batch, mutate=oracle_mutate)
+            oracle_runs = list(zip(bres.stats, bres.traces))
+        else:
+            oracle_runs = [run_oracle_case(s, mutate=oracle_mutate)
+                           for s in batch]
+        for j, i in enumerate(idxs):
+            oracle_out, trace = oracle_runs[j]
+            results[i] = check_case(
+                batch[j], oracle_out, trace,
+                {m: outs[j] for m, outs in engine_outs.items()})
+    return results
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,229 @@
+"""Batch oracle, coverage map and steering loop — tier-1 pins.
+
+The batch oracle (both the NumPy lockstep interpreter and the compiled C
+fast path) must be bit-identical to the sequential reference
+``run_oracle`` on every stat, trace row and exit reason — over the
+checked-in corpus (including the near-INT32_MAX wrap pins), fresh mixed
+batches, and under every injected oracle mutation (the checker self-tests
+must keep working through the batch path).  The coverage layer must
+promote signature-novel cases exactly once, and ``mutate_scenario`` must
+perturb everything except the program.
+"""
+
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.sim.check import (CoverageMap, Scenario, case_signature,
+                             failure_classes, fuzz, generate_batch,
+                             load_scenario, mutate_scenario, replay_corpus,
+                             run_batch_oracle, run_oracle_case, steer)
+from repro.sim.check import _fastcase
+from repro.sim.check.coverage import bucketize
+from repro.sim.check.oracle import ORACLE_MUTATIONS
+from repro.sim.check.runner import STAT_KEYS
+
+CORPUS_DIR = os.path.join(os.path.dirname(__file__), "corpus")
+CORPUS = sorted(glob.glob(os.path.join(CORPUS_DIR, "*.npz")))
+
+IMPLS = ["numpy"] + (["c"] if _fastcase.HAVE_FAST else [])
+
+
+def assert_identical(scenario, stats_b, trace_b, mutate=()):
+    """One case: batch-oracle output == sequential run_oracle output."""
+    stats_a, trace_a = run_oracle_case(scenario, mutate=mutate)
+    for k in STAT_KEYS:
+        np.testing.assert_array_equal(
+            np.asarray(stats_a[k]), np.asarray(stats_b[k]), err_msg=k)
+    assert trace_a.acquires == trace_b.acquires
+    assert trace_a.fadds == trace_b.fadds
+    assert trace_a.exit_reason == trace_b.exit_reason
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity vs the sequential reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_batch_oracle_matches_sequential_on_corpus(impl):
+    """Every corpus entry (incl. wrap_* near-INT32_MAX pins), one-case
+    batches: stats, traces and exit reasons bit-identical."""
+    assert CORPUS, "tests/corpus is empty"
+    for path in CORPUS:
+        s = load_scenario(path)
+        res = run_batch_oracle([s], impl=impl)
+        assert_identical(s, res.stats[0], res.traces[0])
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_batch_oracle_matches_sequential_on_fresh_batch(impl):
+    n = 60 if impl == "c" else 24  # the numpy path is the slow one here
+    scenarios = generate_batch(n, seed=20260807)
+    res = run_batch_oracle(scenarios, impl=impl, collect_coverage=True)
+    for i, s in enumerate(scenarios):
+        assert_identical(s, res.stats[i], res.traces[i])
+    # coverage counters exist for every case and are non-trivial
+    assert res.coverage["op_exec"].shape[0] == n
+    assert res.coverage["op_exec"].sum() > 0
+    assert res.coverage["commits"].sum() > 0
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("mutation", sorted(ORACLE_MUTATIONS))
+def test_batch_oracle_reproduces_mutations(impl, mutation):
+    """Injected oracle bugs must reproduce identically through the batch
+    path — this is what keeps the checker self-tests honest at fuzz
+    scale."""
+    scenarios = generate_batch(16, seed=99)
+    res = run_batch_oracle(scenarios, mutate=(mutation,), impl=impl)
+    for i, s in enumerate(scenarios):
+        assert_identical(s, res.stats[i], res.traces[i],
+                         mutate=(mutation,))
+
+
+@pytest.mark.parametrize("mutation", ["eager_store", "lost_wake"])
+def test_mutants_caught_through_batch_path(mutation):
+    """fuzz(batch_oracle=True) with an injected oracle bug must fail —
+    the differential layer keeps its teeth through the batch oracle."""
+    scenarios = generate_batch(24, seed=7)
+    report = fuzz(scenarios, modes=("map",), oracle_mutate=(mutation,),
+                  batch_oracle=True)
+    assert not report.ok, f"{mutation} not caught via batch oracle"
+
+
+def test_batch_oracle_impls_agree():
+    """NumPy lockstep and C fast path agree with each other directly."""
+    if not _fastcase.HAVE_FAST:
+        pytest.skip("no C compiler")
+    scenarios = generate_batch(24, seed=5)
+    a = run_batch_oracle(scenarios, impl="numpy", collect_coverage=True)
+    b = run_batch_oracle(scenarios, impl="c", collect_coverage=True)
+    for i in range(len(scenarios)):
+        for k in STAT_KEYS:
+            np.testing.assert_array_equal(np.asarray(a.stats[i][k]),
+                                          np.asarray(b.stats[i][k]))
+        assert a.traces[i].acquires == b.traces[i].acquires
+        assert a.traces[i].fadds == b.traces[i].fadds
+        assert a.traces[i].exit_reason == b.traces[i].exit_reason
+    for key in ("op_exec", "branch_taken", "spin_sleep", "commits",
+                "wakes", "wraps"):
+        np.testing.assert_array_equal(a.coverage[key], b.coverage[key],
+                                      err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# Coverage signatures + map
+# ---------------------------------------------------------------------------
+
+def test_bucketize_is_log2ish():
+    assert bucketize([0, 1, 2, 3, 4, 7, 8, 15, 16, 31, 32, 127, 128, 10**6]) \
+        == (0, 1, 2, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8)
+
+
+def test_coverage_map_novelty_and_roundtrip(tmp_path):
+    scenarios = generate_batch(32, seed=13)
+    res = run_batch_oracle(scenarios, collect_coverage=True)
+    cm = CoverageMap()
+    novel = cm.add_batch(scenarios, res)
+    assert novel, "a fresh mixed batch must contain novel signatures"
+    # the same batch again: nothing is novel the second time
+    assert cm.add_batch(scenarios, res) == []
+    assert cm.n_cases == 64
+    rep = cm.report()
+    assert rep["n_signatures"] == cm.n_signatures
+    assert sum(rep["opcode_exec"].values()) == int(cm.op_totals.sum())
+    path = tmp_path / "cov.json"
+    cm.save(path)
+    cm2 = CoverageMap.load(path)
+    assert cm2.signatures == cm.signatures
+
+
+def test_case_signature_separates_locks():
+    scenarios = generate_batch(22, seed=3)  # covers every SIM_LOCKS entry
+    res = run_batch_oracle(scenarios, collect_coverage=True)
+    cov = res.coverage
+    sigs = {
+        case_signature(s, cov["op_exec"][i], cov["branch_taken"][i],
+                       cov["spin_sleep"][i], cov["commits"][i],
+                       cov["wakes"][i], cov["wraps"][i],
+                       res.traces[i].exit_reason)
+        for i, s in enumerate(scenarios)}
+    locks = {s.lock or s.kind for s in scenarios}
+    assert len(sigs) >= len(locks)
+
+
+# ---------------------------------------------------------------------------
+# Steering + mutation
+# ---------------------------------------------------------------------------
+
+def test_mutate_scenario_never_touches_program():
+    rng = np.random.default_rng(0)
+    for s in generate_batch(12, seed=21):
+        m = mutate_scenario(s, rng, n_mutations=3)
+        assert isinstance(m, Scenario)
+        np.testing.assert_array_equal(np.asarray(s.program),
+                                      np.asarray(m.program))
+        assert (m.n_threads, m.mem_words, m.n_locks) == \
+            (s.n_threads, s.mem_words, s.n_locks)
+        assert m.n_active <= s.n_active  # reduce-only
+        # a mutant still replays through both oracles identically
+        res = run_batch_oracle([m])
+        assert_identical(m, res.stats[0], res.traces[0])
+
+
+def test_mutate_scenario_can_seed_ticket_wrap():
+    from repro.sim.check.generate import WRAP_SEED_LOCKS
+    from repro.sim.isa import OFF_GRANT, OFF_TICKET
+    rng = np.random.default_rng(4)
+    s = next(s for s in generate_batch(22, seed=2)
+             if s.lock in WRAP_SEED_LOCKS and not s.meta.get("ticket_base"))
+    # drive the rng until the ticket_base mutation fires
+    for _ in range(200):
+        m = mutate_scenario(s, rng)
+        if m.meta.get("ticket_base"):
+            break
+    else:
+        pytest.fail("ticket_base mutation never drawn")
+    assert int(np.asarray(m.init_mem)[OFF_TICKET]) == m.meta["ticket_base"]
+    assert int(np.asarray(m.init_mem)[OFF_GRANT]) == m.meta["ticket_base"]
+    assert m.meta["ticket_base"] > 2**31 - 16
+
+
+def test_steer_promotes_novel_and_mutates():
+    res = steer(60, seed=17, modes=("map",), batch_size=20)
+    assert res.report.ok, res.report.summary()
+    assert res.report.n_cases == 60
+    # round 1 is all-fresh and must promote; later rounds draw mutants
+    assert res.pool, "no coverage-novel case was promoted"
+    assert res.n_mutants > 0, "steering never mutated from the pool"
+    assert res.coverage.n_signatures == len(res.coverage.signatures)
+    # every promoted case was novel when added: pool size <= novel count
+    assert len(res.pool) <= len(res.report.novel)
+
+
+def test_steer_does_not_promote_duplicates():
+    """Feeding fuzz the SAME batch twice through one CoverageMap promotes
+    on the first pass and not on the second."""
+    scenarios = generate_batch(16, seed=31)
+    cm = CoverageMap()
+    first = fuzz(scenarios, modes=("map",), batch_oracle=True, coverage=cm)
+    second = fuzz(scenarios, modes=("map",), batch_oracle=True, coverage=cm)
+    assert first.novel
+    assert second.novel == []
+
+
+# ---------------------------------------------------------------------------
+# Batched corpus replay
+# ---------------------------------------------------------------------------
+
+def test_replay_corpus_batched_matches_expect_classes():
+    """Grouped replay (one engine dispatch per mode per shape group) must
+    reproduce every entry's pinned expect_classes — same verdicts as the
+    per-entry replay path in test_check_corpus.py."""
+    problems = replay_corpus(CORPUS, modes=("map",))
+    assert len(problems) == len(CORPUS)
+    for path, probs in zip(CORPUS, problems):
+        expect = set(load_scenario(path).meta.get("expect_classes", []))
+        assert failure_classes(probs) == expect, (path, probs[:3])
