@@ -43,7 +43,7 @@ from repro.sim.check.runner import STAT_KEYS
 from .common import emit
 
 CASES = 48
-SMOKE_CASES = 22  # 13/0.6 threshold: every SIM_LOCKS entry composed once
+SMOKE_CASES = 24  # 14/0.6 threshold: every SIM_LOCKS entry composed once
 SEED = 20260731
 
 # Batch-oracle gate config (the "CI CPU fuzz config"): fresh-batch size,

@@ -3,9 +3,9 @@ benchmarks.  Prints ``name,value,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,table1] [--smoke]
 
-``--smoke`` asks each suite that supports it (fig8, fig9, fig10) for a
-reduced grid — CI runs these per-PR and uploads the CSV as a workflow
-artifact.
+``--smoke`` asks each suite that supports it (fig8, fig9, fig10,
+fig12deg, fuzz) for a reduced grid — CI runs these per-PR and uploads the
+CSV as a workflow artifact.
 """
 
 from __future__ import annotations
@@ -28,6 +28,7 @@ SUITES = [
     ("fig9", "benchmarks.fig9_cost_grid"),
     ("fig10", "benchmarks.fig10_rw_scaling"),
     ("fig11", "benchmarks.fig11_locktorture"),
+    ("fig12deg", "benchmarks.fig12_degradation"),
     ("threads", "benchmarks.threads_microbench"),
     ("admission", "benchmarks.framework_admission"),
     ("bench_engine", "benchmarks.bench_engine"),

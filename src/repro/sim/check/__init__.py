@@ -32,7 +32,8 @@ from .batch_oracle import BatchOracleResult, run_batch_oracle
 from .coverage import BUCKETS, CoverageMap, case_signature
 from .generate import (PAD_LOCKS, PAD_MEM_WORDS, PAD_THREADS, Scenario,
                        gen_composed_scenario, gen_geometry,
-                       gen_random_scenario, generate_batch, mutate_scenario)
+                       gen_random_scenario, generate_batch, mutate_scenario,
+                       scenario_faults, splice_programs, with_fault_schedule)
 from .invariants import active_classes, check_invariants
 from .oracle import ORACLE_MUTATIONS, Trace, run_oracle
 from .runner import (MODES, PALLAS_CHUNK_POOL, SCHED_GEOMETRY_POOL,
@@ -45,6 +46,7 @@ from .runner import (MODES, PALLAS_CHUNK_POOL, SCHED_GEOMETRY_POOL,
 __all__ = [
     "Scenario", "gen_geometry", "gen_random_scenario",
     "gen_composed_scenario", "generate_batch", "mutate_scenario",
+    "scenario_faults", "splice_programs", "with_fault_schedule",
     "PAD_THREADS", "PAD_LOCKS", "PAD_MEM_WORDS",
     "run_oracle", "Trace", "ORACLE_MUTATIONS",
     "run_batch_oracle", "BatchOracleResult",

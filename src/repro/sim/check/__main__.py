@@ -29,7 +29,19 @@ Fuzz-scale switches:
     replayable ``.npz`` (the nightly's expanded-corpus artifact).
   * ``--replay``          — a ``.npz`` file replays one case; a directory
     replays every entry as padded batches (one engine dispatch per mode
-    per shape group) and checks each against its ``expect_classes`` pin.
+    per shape group) and checks each against its ``expect_classes`` pin,
+    printing the missing/unexpected classes per mismatching entry and
+    exiting nonzero on any mismatch.
+  * ``--promote DIR``     — with ``--replay``: triage mode.  Each replayed
+    entry is re-saved into ``DIR`` (e.g. ``tests/corpus/``) with its
+    *observed* failure classes pinned as ``expect_classes``, turning a
+    fresh fuzz artifact into a regression-pinned corpus entry.
+  * ``--fault-fraction``  — decorate that fraction of generated cases with
+    a drawn fault schedule (preemptions / spurious wakes / aborts); 0
+    reproduces historical fault-free batches byte for byte.
+  * ``--coverage-in``     — seed the coverage map from a previous run's
+    ``--coverage-report`` JSON, so novelty judgments (and the promoted
+    pool) are cumulative across nightly runs.
 """
 
 from __future__ import annotations
@@ -72,8 +84,28 @@ def _replay(args, modes, mutate) -> int:
         print(f"  {os.path.basename(path)}: expect={sorted(expect)} "
               f"got={sorted(got)} {status}")
         if status != "ok":
+            missing, unexpected = expect - got, got - expect
+            if missing:
+                print(f"    missing classes: {sorted(missing)} "
+                      f"(pinned failure no longer reproduces)")
+            if unexpected:
+                print(f"    unexpected classes: {sorted(unexpected)}")
             for p in probs[:4]:
                 print(f"    {p}")
+    if args.promote:
+        os.makedirs(args.promote, exist_ok=True)
+        for path, probs in zip(paths, problems):
+            s = load_scenario(path)
+            classes = sorted(failure_classes(probs))
+            s = s.replace(meta={**s.meta, "expect_classes": classes})
+            dest = os.path.join(args.promote, os.path.basename(path))
+            save_scenario(dest, s,
+                          note=s.meta.get("note", "")
+                          or "; ".join(probs[:4]))
+            print(f"  promoted {os.path.basename(path)} -> {dest} "
+                  f"(expect_classes={classes})")
+        print(f"promoted {len(paths)} triaged entries into {args.promote}")
+        return 0
     print(f"replayed {len(paths)} entries in {time.time() - t0:.1f}s, "
           f"{bad} mismatching")
     return 1 if bad else 0
@@ -94,6 +126,17 @@ def main(argv=None) -> int:
     ap.add_argument("--replay", default="",
                     help="replay a corpus .npz (or a directory of them) "
                          "instead of generating")
+    ap.add_argument("--promote", default="",
+                    help="with --replay: re-save every replayed entry into "
+                         "this directory with its observed failure classes "
+                         "pinned as expect_classes")
+    ap.add_argument("--fault-fraction", type=float, default=0.0,
+                    help="fraction of generated cases decorated with a "
+                         "drawn fault schedule (0 = fault-free batches, "
+                         "byte-identical to historical runs)")
+    ap.add_argument("--coverage-in", default="",
+                    help="seed the coverage map from a previous run's "
+                         "--coverage-report JSON (cumulative novelty)")
     ap.add_argument("--no-shrink", action="store_true")
     ap.add_argument("--batch-oracle", action="store_true",
                     help="vectorized batch oracle for the oracle side")
@@ -119,9 +162,15 @@ def main(argv=None) -> int:
 
     t0 = time.time()
     coverage = None
+    if args.coverage_in:
+        from .coverage import CoverageMap
+        coverage = CoverageMap.load(args.coverage_in)
+        print(f"seeded coverage map from {args.coverage_in} "
+              f"({coverage.n_signatures} prior signatures)")
     if args.steer:
         res = steer(args.cases, seed, modes=modes,
-                    batch_size=args.batch_size)
+                    batch_size=args.batch_size, coverage=coverage,
+                    fault_fraction=args.fault_fraction)
         report, coverage = res.report, res.coverage
         print(f"steered {report.n_cases} cases (seed={seed}): "
               f"{len(res.pool)} promoted, {res.n_mutants} mutants, "
@@ -136,14 +185,15 @@ def main(argv=None) -> int:
             print(f"wrote {len(res.pool)} promoted cases to "
                   f"{args.corpus_out}")
     else:
-        if args.coverage_report and args.batch_oracle:
+        if args.coverage_report and args.batch_oracle and coverage is None:
             from .coverage import CoverageMap
             coverage = CoverageMap()
-        scenarios = generate_batch(args.cases, seed)
+        scenarios = generate_batch(args.cases, seed,
+                                   fault_fraction=args.fault_fraction)
         print(f"generated {len(scenarios)} scenarios (seed={seed})")
         report = fuzz(scenarios, modes=modes, oracle_mutate=mutate,
                       sched_seed=seed, batch_oracle=args.batch_oracle,
-                      coverage=coverage)
+                      coverage=coverage if args.batch_oracle else None)
     dt = time.time() - t0
     print(report.summary())
     print(f"elapsed {dt:.1f}s "

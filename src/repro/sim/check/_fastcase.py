@@ -19,6 +19,11 @@ Faithfulness contract (same as batch_oracle.py, differentially pinned by
     lowest thread index;
   * ``pend_addr``/``spin_addr`` keep RAW addresses (commit-presence is
     ``>= 0``, wakeups compare raw values);
+  * fault schedules (``repro.sim.faults``) apply under the extended
+    ``EVENT_ORDER_CONTRACT``: mutate persisted state after the stop check,
+    re-select the event, and skip the step (counter unchanged) when the
+    post-fault earliest time reaches the horizon; woken threads pay their
+    accumulated ``wake_delay`` on top of ``C_WAKE``;
   * in-range negative memory/pc/lock indices wrap once like Python lists;
     anything outside ``[-N, N)`` (or an unknown opcode) returns 1 and the
     caller re-runs the case on the sequential oracle, reproducing the
@@ -45,10 +50,12 @@ from pathlib import Path
 from .. import isa
 from ..costs import (I_ATOMIC, I_HIT, I_INV, I_LOCAL, I_MISS, I_ST_OWNED,
                      I_ST_SHARED, I_WAKE, I_XFER)
+from ..faults import F_ABORT, F_PREEMPT, F_SPURIOUS
 from .oracle import INF as _INF
 
 # Mutation bit flags (keep in sync with the #defines below).
-MUTATION_FLAGS = {"eager_store": 1, "lost_wake": 2, "free_invalidation": 4}
+MUTATION_FLAGS = {"eager_store": 1, "lost_wake": 2, "free_invalidation": 4,
+                  "dropped_fault": 8}
 
 _C_TEMPLATE = r"""
 #include <stdint.h>
@@ -105,8 +112,41 @@ _C_TEMPLATE = r"""
 #define MUT_EAGER   1
 #define MUT_LOST    2
 #define MUT_FREEINV 4
+#define MUT_DROPFAULT 8
+
+#define F_PREEMPT  %(F_PREEMPT)d
+#define F_SPURIOUS %(F_SPURIOUS)d
+#define F_ABORT    %(F_ABORT)d
 
 static inline int32_t w32(int64_t v) { return (int32_t)(uint64_t)v; }
+
+/* Event selection (EVENT_ORDER_CONTRACT): earliest pending commit and
+ * earliest thread time, first minimum == lowest thread index.  Factored
+ * out because the fault phase re-selects from the post-fault state. */
+static inline int32_t select_event(int T, int npend,
+        const int32_t *pend_addr, const int32_t *pend_time,
+        const int32_t *next_time,
+        int32_t *t_cm_out, int *tc_out, int32_t *t_th_out, int *tt_out) {
+    int32_t t_cm = INF, t_th = INF;
+    int tc = 0, tt = 0;
+    if (npend)
+        for (int u = 0; u < T; u++)
+            if (pend_addr[u] >= 0 && pend_time[u] < t_cm) {
+                t_cm = pend_time[u]; tc = u;
+            }
+    if (T == 8) {  /* the padded fuzz width: unrollable/vectorizable */
+        int32_t m = next_time[0];
+        for (int u = 1; u < 8; u++) if (next_time[u] < m) m = next_time[u];
+        for (int u = 0; u < 8; u++)
+            if (next_time[u] == m) { tt = u; break; }
+        t_th = m;
+    } else {
+        for (int u = 0; u < T; u++)
+            if (next_time[u] < t_th) { t_th = next_time[u]; tt = u; }
+    }
+    *t_cm_out = t_cm; *tc_out = tc; *t_th_out = t_th; *tt_out = tt;
+    return t_cm < t_th ? t_cm : t_th;
+}
 
 /* Register GATHER index: wrap one negative step, then clamp to [0, 16). */
 static inline int rd(int32_t idx) {
@@ -129,10 +169,15 @@ int run_case(
     int32_t wa_base, int32_t wa_size,
     int32_t horizon, int32_t max_events,
     const int32_t *costs, int32_t mut,
+    /* fault schedule: (n_faults,) each, kind 0 = pad; NULL when none */
+    const int32_t *f_kind, const int32_t *f_evt,
+    const int32_t *f_tid, const int32_t *f_arg, int32_t n_faults,
     /* outputs */
     int32_t *out_acq, int32_t *out_waited,         /* (T,) each */
     int32_t *out_scalars,  /* [hand_sum, hand_cnt, events, sleeping, exit] */
     int32_t *out_mem,                              /* (M,) */
+    int32_t *out_spin, int32_t *out_pc,            /* (T,) each */
+    int32_t *out_regs,                             /* (T, N_REGS) */
     int32_t *acq_trace, int64_t acq_cap,           /* (acq_cap, 6) or NULL */
     int32_t *fadd_trace, int64_t fadd_cap,         /* (fadd_cap, 5) or NULL */
     int32_t *trace_counts,                         /* [n_acq, n_fadd] */
@@ -155,12 +200,14 @@ int run_case(
     int32_t *pend_val = (int32_t *)malloc((size_t)T * 4);
     int32_t *pend_time = (int32_t *)malloc((size_t)T * 4);
     int32_t *spin = (int32_t *)malloc((size_t)T * 4);
+    int32_t *wake_delay = (int32_t *)calloc((size_t)T, 4);
     uint32_t *prngv = (uint32_t *)malloc((size_t)T * 4);
     int32_t *dirtyv = (int32_t *)malloc((size_t)n_lines * 4);
     uint64_t *sharers = (uint64_t *)calloc((size_t)n_lines, 8);
     int32_t *relt = (int32_t *)malloc((size_t)L * 4);
     if (!mem || !regs || !pcv || !next_time || !pend_addr || !pend_val ||
-        !pend_time || !spin || !prngv || !dirtyv || !sharers || !relt) {
+        !pend_time || !spin || !wake_delay || !prngv || !dirtyv ||
+        !sharers || !relt) {
         ret = 2;
         goto done;
     }
@@ -183,24 +230,10 @@ int run_case(
 
     for (;;) {
         /* --- event selection (EVENT_ORDER_CONTRACT) -------------------- */
-        int32_t t_cm = INF, t_th = INF;
-        int tc = 0, tt = 0;
-        if (npend)
-            for (int u = 0; u < T; u++)
-                if (pend_addr[u] >= 0 && pend_time[u] < t_cm) {
-                    t_cm = pend_time[u]; tc = u;
-                }
-        if (T == 8) {  /* the padded fuzz width: unrollable/vectorizable */
-            int32_t m = next_time[0];
-            for (int u = 1; u < 8; u++) if (next_time[u] < m) m = next_time[u];
-            for (int u = 0; u < 8; u++)
-                if (next_time[u] == m) { tt = u; break; }
-            t_th = m;
-        } else {
-            for (int u = 0; u < T; u++)
-                if (next_time[u] < t_th) { t_th = next_time[u]; tt = u; }
-        }
-        int32_t now = t_cm < t_th ? t_cm : t_th;
+        int32_t t_cm, t_th;
+        int tc, tt;
+        int32_t now = select_event(T, npend, pend_addr, pend_time,
+                                   next_time, &t_cm, &tc, &t_th, &tt);
         if (!(events < max_events && now < horizon)) {
             if (events >= max_events) exit_code = 1;
             else if (now < INF) exit_code = 2;
@@ -210,6 +243,43 @@ int run_case(
                 exit_code = anyspin ? 3 : 4;
             }
             break;
+        }
+        /* --- fault phase (extended contract): an entry matching the
+         * current event counter mutates persisted state, then the event is
+         * re-selected; past-horizon means no event executes this step and
+         * the counter does not advance. */
+        if (n_faults && !(mut & MUT_DROPFAULT)) {
+            int applied = 0;
+            for (int f = 0; f < n_faults; f++) {
+                if (f_kind[f] != 0 && f_evt[f] == events) {
+                    int u = f_tid[f];
+                    if (f_kind[f] == F_PREEMPT) {
+                        if (next_time[u] < INF)
+                            next_time[u] =
+                                w32((int64_t)next_time[u] + f_arg[f]);
+                        else
+                            wake_delay[u] =
+                                w32((int64_t)wake_delay[u] + f_arg[f]);
+                    } else if (f_kind[f] == F_SPURIOUS) {
+                        if (spin[u] >= 0) {
+                            next_time[u] = w32((int64_t)now + costs[I_WAKE]
+                                               + wake_delay[u]);
+                            wake_delay[u] = 0;
+                            spin[u] = -1;
+                        }
+                    } else {  /* F_ABORT: dead, never wakeable */
+                        next_time[u] = INF;
+                        spin[u] = -1;
+                    }
+                    applied = 1;
+                    break;  /* event indices are unique per schedule */
+                }
+            }
+            if (applied) {
+                now = select_event(T, npend, pend_addr, pend_time,
+                                   next_time, &t_cm, &tc, &t_th, &tt);
+                if (now >= horizon) continue;
+            }
         }
         events++;
 
@@ -227,7 +297,8 @@ int run_case(
                 int32_t resume = w32((int64_t)now + costs[I_WAKE]);
                 for (int u = 0; u < T; u++)
                     if (spin[u] == addr) {
-                        next_time[u] = resume;
+                        next_time[u] = w32((int64_t)resume + wake_delay[u]);
+                        wake_delay[u] = 0;
                         spin[u] = -1;
                         if (cov_scalars) cov_scalars[1]++;
                     }
@@ -332,7 +403,8 @@ int run_case(
                                      costs[I_WAKE]);
                 for (int u = 0; u < T; u++)
                     if (spin[u] == addr) {  /* RAW address compare */
-                        next_time[u] = resume;
+                        next_time[u] = w32((int64_t)resume + wake_delay[u]);
+                        wake_delay[u] = 0;
                         spin[u] = -1;
                         if (cov_scalars) cov_scalars[1]++;
                     }
@@ -455,12 +527,15 @@ int run_case(
         out_scalars[4] = exit_code;
     }
     memcpy(out_mem, mem, (size_t)M * 4);
+    memcpy(out_spin, spin, (size_t)T * 4);
+    memcpy(out_pc, pcv, (size_t)T * 4);
+    memcpy(out_regs, regs, (size_t)T * N_REGS * 4);
 
 done:
     if (trace_counts) { trace_counts[0] = nacq; trace_counts[1] = nfadd; }
     free(mem); free(regs); free(pcv); free(next_time); free(pend_addr);
-    free(pend_val); free(pend_time); free(spin); free(prngv); free(dirtyv);
-    free(sharers); free(relt);
+    free(pend_val); free(pend_time); free(spin); free(wake_delay);
+    free(prngv); free(dirtyv); free(sharers); free(relt);
     return ret;
 }
 
@@ -477,8 +552,12 @@ int run_cases(
     const int32_t *wa_base, const int32_t *wa_size,
     const int32_t *horizon, const int32_t *max_events,
     const int32_t *costs, int32_t mut,
+    const int32_t *f_kind, const int32_t *f_evt,      /* (n_cases, n_faults) */
+    const int32_t *f_tid, const int32_t *f_arg,       /* each, or NULL */
+    int32_t n_faults,
     int32_t *out_acq, int32_t *out_waited,
     int32_t *out_scalars, int32_t *out_mem,
+    int32_t *out_spin, int32_t *out_pc, int32_t *out_regs,
     int32_t *ret_codes,
     int32_t *acq_trace, int64_t acq_cap,
     int32_t *fadd_trace, int64_t fadd_cap,
@@ -496,8 +575,15 @@ int run_cases(
             init_mem + (size_t)i * M,
             n_active[i], seeds[i], wa_base[i], wa_size[i],
             horizon[i], max_events[i], costs + (size_t)i * N_COSTS, mut,
+            f_kind ? f_kind + (size_t)i * n_faults : 0,
+            f_evt ? f_evt + (size_t)i * n_faults : 0,
+            f_tid ? f_tid + (size_t)i * n_faults : 0,
+            f_arg ? f_arg + (size_t)i * n_faults : 0,
+            f_kind ? n_faults : 0,
             out_acq + (size_t)i * T, out_waited + (size_t)i * T,
             out_scalars + (size_t)i * 5, out_mem + (size_t)i * M,
+            out_spin + (size_t)i * T, out_pc + (size_t)i * T,
+            out_regs + (size_t)i * T * N_REGS,
             acq_trace ? acq_trace + acq_off * 6 : 0,
             acq_trace ? acq_cap - acq_off : 0,
             fadd_trace ? fadd_trace + fadd_off * 5 : 0,
@@ -540,7 +626,8 @@ def _c_source() -> str:
                 I_XFER=I_XFER, I_ST_OWNED=I_ST_OWNED,
                 I_ST_SHARED=I_ST_SHARED, I_INV=I_INV, I_ATOMIC=I_ATOMIC,
                 I_WAKE=I_WAKE, N_COSTS=I_WAKE + 1,
-                N_BRANCH_KINDS=isa.JMP - isa.BEQ + 1, N_SPIN_KINDS=5)
+                N_BRANCH_KINDS=isa.JMP - isa.BEQ + 1, N_SPIN_KINDS=5,
+                F_PREEMPT=F_PREEMPT, F_SPURIOUS=F_SPURIOUS, F_ABORT=F_ABORT)
     return _C_TEMPLATE % subs
 
 
@@ -554,8 +641,10 @@ _CASES_ARGTYPES = (
      I32P, I64P,                                  # n_active, seeds
      I32P, I32P, I32P, I32P,                      # wa_base/size, hz, max_ev
      I32P, ctypes.c_int32]                        # costs, mutate flags
-    + [I32P] * 5                                  # acq, waited, scalars,
-                                                  #   mem, ret_codes
+    + [I32P] * 4 + [ctypes.c_int32]               # fault arrays + n_faults
+    + [I32P] * 8                                  # acq, waited, scalars,
+                                                  #   mem, spin, pc, regs,
+                                                  #   ret_codes
     + [I32P, ctypes.c_int64, I32P, ctypes.c_int64]  # trace bufs + caps
     + [I64P, I32P]                                # trace offsets + counts
     + [I32P] * 4                                  # coverage

@@ -47,6 +47,8 @@ import numpy as np
 from .. import isa
 from ..costs import (I_ATOMIC, I_HIT, I_INV, I_LOCAL, I_MISS, I_ST_OWNED,
                      I_ST_SHARED, I_WAKE, I_XFER)
+from ..faults import F_ABORT, F_PREEMPT, F_SPURIOUS
+from .generate import scenario_faults
 from .oracle import INF, ORACLE_MUTATIONS, Trace, run_oracle
 from . import _fastcase
 
@@ -107,6 +109,7 @@ def run_batch_oracle(scenarios, mutate: tuple = (),
     eager_store = "eager_store" in mutate
     lost_wake = "lost_wake" in mutate
     free_inv = "free_invalidation" in mutate
+    dropped_fault = "dropped_fault" in mutate
 
     B = len(scenarios)
     if not B:
@@ -141,6 +144,22 @@ def run_batch_oracle(scenarios, mutate: tuple = (),
                            for s in scenarios], np.int64)
     seeds = np.asarray([s.seed for s in scenarios], np.int64)
 
+    # Per-case fault schedules (meta["faults"]), padded to a shared width.
+    # ``dropped_fault`` is the checker-self-test mutation: the schedules are
+    # silently ignored, which the differential layer must catch.
+    scheds = [scenario_faults(s) for s in scenarios]
+    n_faults = max((len(sc) for sc in scheds if sc is not None), default=0)
+    have_faults = n_faults > 0 and not dropped_fault
+    if have_faults:
+        f_kind = np.zeros((B, n_faults), np.int64)
+        f_evt = np.zeros((B, n_faults), np.int64)
+        f_tid = np.zeros((B, n_faults), np.int64)
+        f_arg = np.zeros((B, n_faults), np.int64)
+        for i, sc in enumerate(scheds):
+            if sc is not None and len(sc):
+                k, e, t, g = sc.padded(n_faults)
+                f_kind[i], f_evt[i], f_tid[i], f_arg[i] = k, e, t, g
+
     tids = np.arange(T, dtype=np.int64)
     next_time = np.where(tids[None, :] < n_active[:, None], 0,
                          INF).astype(np.int64)
@@ -156,6 +175,7 @@ def run_batch_oracle(scenarios, mutate: tuple = (),
     pend_val = np.zeros((B, T), np.int64)
     pend_time = np.zeros((B, T), np.int64)
     spin_addr = np.full((B, T), -1, np.int64)
+    wake_delay = np.zeros((B, T), np.int64)
     acq = np.zeros((B, T), np.int64)
     waited_acq = np.zeros((B, T), np.int64)
     rel_time = np.full((B, L), -1, np.int64)
@@ -208,6 +228,62 @@ def run_batch_oracle(scenarios, mutate: tuple = (),
             keep = ~stop
             run, tc, t_cm, tt, t_th, now = (run[keep], tc[keep], t_cm[keep],
                                             tt[keep], t_th[keep], now[keep])
+        # --- fault phase (extended EVENT_ORDER_CONTRACT): entries whose
+        # event index equals the case's event counter mutate persisted
+        # state BEFORE event selection; the event is then re-selected from
+        # the post-fault state, and a case pushed past its horizon executes
+        # no event this iteration (its event counter does not advance).
+        if have_faults:
+            fm = (f_kind[run] != 0) & (f_evt[run] == events[run][:, None])
+            fhit = fm.any(1)
+            if fhit.any():
+                hi = np.flatnonzero(fhit)
+                slot = fm[hi].argmax(1)  # unique evts: at most one match
+                cases = run[hi]
+                kind = f_kind[cases, slot]
+                ftid = f_tid[cases, slot]
+                farg = f_arg[cases, slot]
+                fnow = now[hi]
+                pre = kind == F_PREEMPT
+                if pre.any():
+                    cp, tp, ap = cases[pre], ftid[pre], farg[pre]
+                    on = next_time[cp, tp] < INF
+                    next_time[cp[on], tp[on]] = _w32(
+                        next_time[cp[on], tp[on]] + ap[on])
+                    off = ~on
+                    wake_delay[cp[off], tp[off]] = _w32(
+                        wake_delay[cp[off], tp[off]] + ap[off])
+                spw = kind == F_SPURIOUS
+                if spw.any():
+                    cs, ts = cases[spw], ftid[spw]
+                    parked = spin_addr[cs, ts] >= 0
+                    cs, ts = cs[parked], ts[parked]
+                    fn = fnow[spw][parked]
+                    next_time[cs, ts] = _w32(fn + C[cs, I_WAKE]
+                                             + wake_delay[cs, ts])
+                    wake_delay[cs, ts] = 0
+                    spin_addr[cs, ts] = -1
+                ab = kind == F_ABORT
+                if ab.any():
+                    ca, ta = cases[ab], ftid[ab]
+                    next_time[ca, ta] = INF
+                    spin_addr[ca, ta] = -1
+                cm2 = np.where(pend_addr[cases] >= 0, pend_time[cases], INF)
+                ar2 = np.arange(cases.size)
+                tc2 = cm2.argmin(1)
+                nt2 = next_time[cases]
+                tt2 = nt2.argmin(1)
+                tc[hi], t_cm[hi] = tc2, cm2[ar2, tc2]
+                tt[hi], t_th[hi] = tt2, nt2[ar2, tt2]
+                now[hi] = np.minimum(t_cm[hi], t_th[hi])
+                over = now >= horizon[run]
+                if over.any():
+                    keep = ~over
+                    run, tc, t_cm, tt, t_th, now = (
+                        run[keep], tc[keep], t_cm[keep], tt[keep],
+                        t_th[keep], now[keep])
+                    if run.size == 0:
+                        continue
         events[run] += 1
         is_cm = t_cm <= t_th  # tie resolves to the commit
 
@@ -231,9 +307,12 @@ def run_batch_oracle(scenarios, mutate: tuple = (),
                 watch = sa == addr[:, None]
                 if watch.any():
                     ntc = next_time[cg]
-                    ntc[watch] = np.broadcast_to(resume[:, None],
-                                                 watch.shape)[watch]
+                    ntc[watch] = _w32(np.broadcast_to(
+                        resume[:, None], watch.shape) + wake_delay[cg])[watch]
                     next_time[cg] = ntc
+                    wd = wake_delay[cg]
+                    wd[watch] = 0
+                    wake_delay[cg] = wd
                     sa[watch] = -1
                     spin_addr[cg] = sa
                     if collect_coverage:
@@ -308,9 +387,12 @@ def run_batch_oracle(scenarios, mutate: tuple = (),
             watch = sa == addr[:, None]
             if watch.any():
                 ntc = next_time[cases]
-                ntc[watch] = np.broadcast_to(resume[:, None],
-                                             watch.shape)[watch]
+                ntc[watch] = _w32(np.broadcast_to(
+                    resume[:, None], watch.shape) + wake_delay[cases])[watch]
                 next_time[cases] = ntc
+                wd = wake_delay[cases]
+                wd[watch] = 0
+                wake_delay[cases] = wd
                 sa[watch] = -1
                 spin_addr[cases] = sa
                 if collect_coverage:
@@ -537,6 +619,9 @@ def run_batch_oracle(scenarios, mutate: tuple = (),
         for i in ok_cases:
             tr = Trace()
             tr.exit_reason = _EXIT_NAMES[int(exit_code[i])]
+            tr.final_spin_addr = spin_addr[i].tolist()
+            tr.final_pc = pc[i].tolist()
+            tr.final_regs = regs[i].tolist()
             traces[i] = tr
         for buf, attr in ((acq_buf, "acquires"), (fadd_buf, "fadds")):
             if not buf:
@@ -594,10 +679,26 @@ def _run_batch_c(scenarios, mutate, collect_trace,
     for m in mutate:
         mut |= _fastcase.MUTATION_FLAGS[m]
 
+    scheds = [scenario_faults(s) for s in scenarios]
+    n_faults = max((len(sc) for sc in scheds if sc is not None), default=0)
+    if n_faults:
+        fk = np.zeros((B, n_faults), i32)
+        fe = np.zeros((B, n_faults), i32)
+        ft = np.zeros((B, n_faults), i32)
+        fa = np.zeros((B, n_faults), i32)
+        for i, sc in enumerate(scheds):
+            if sc is not None and len(sc):
+                fk[i], fe[i], ft[i], fa[i] = sc.padded(n_faults)
+    else:
+        fk = fe = ft = fa = None
+
     out_acq = np.zeros((B, T), i32)
     out_waited = np.zeros((B, T), i32)
     out_scalars = np.zeros((B, 5), i32)
     out_mem = np.zeros((B, M), i32)
+    out_spin = np.zeros((B, T), i32)
+    out_pc = np.zeros((B, T), i32)
+    out_regs = np.zeros((B, T, isa.N_REGS), i32)
     rets = np.zeros(B, i32)
     toff = np.zeros((B, 2), np.int64)
     tcnt = np.zeros((B, 2), i32)
@@ -629,7 +730,9 @@ def _run_batch_c(scenarios, mutate, collect_trace,
         p32(n_active), seeds.ctypes.data_as(_fastcase.I64P),
         p32(wa_base), p32(wa_size), p32(horizon), p32(max_events),
         p32(costs), mut,
+        p32(fk), p32(fe), p32(ft), p32(fa), n_faults,
         p32(out_acq), p32(out_waited), p32(out_scalars), p32(out_mem),
+        p32(out_spin), p32(out_pc), p32(out_regs),
         p32(rets),
         p32(acq_trace), acq_cap, p32(fadd_trace), fadd_cap,
         toff.ctypes.data_as(_fastcase.I64P), p32(tcnt),
@@ -680,6 +783,10 @@ def _run_batch_c(scenarios, mutate, collect_trace,
             an, fn = tcnt_l[i]
             tr.acquires = acq_rows[ao:ao + an]
             tr.fadds = fadd_rows[fo:fo + fn]
+            tr.faults_applied = []
+            tr.final_spin_addr = out_spin[i].tolist()
+            tr.final_pc = out_pc[i].tolist()
+            tr.final_regs = out_regs[i].tolist()
             traces[i] = tr
     coverage = None
     if collect_coverage:

@@ -13,7 +13,13 @@ A signature is::
 
     (lock, active-invariant-classes, exit_reason,
      bucketed op histogram, bucketed taken-branch histogram,
-     bucketed spin-park histogram, bucketed (commits, wakes, wraps))
+     bucketed spin-park histogram, bucketed (commits, wakes, wraps),
+     bucketed (preempt, spurious, abort) fault counts)
+
+The fault counts are STATIC — read off the scenario's scheduled fault
+rows, not off runtime counters — so the signature is identical no matter
+which execution path ran the case, and a fault-laden variant of a known
+case class is exactly one new signature away from its clean twin.
 
 where every raw count is squashed through log2-ish buckets
 (:data:`BUCKETS`), AFL-style: the difference between 33 and 40 wakeups is
@@ -35,8 +41,9 @@ from collections import Counter
 import numpy as np
 
 from .. import isa
+from ..faults import F_ABORT, F_PREEMPT, F_SPURIOUS
 from .batch_oracle import N_BRANCH_KINDS, N_SPIN_KINDS
-from .invariants import active_classes
+from .invariants import active_classes, scenario_fault_schedule
 
 # Log2-ish bucket edges: count -> np.digitize(count, BUCKETS) so
 # 0->0, 1->1, 2->2, 3->3, 4..7->4, 8..15->5, 16..31->6, 32..127->7, 128+->8.
@@ -54,6 +61,16 @@ def bucketize(arr) -> tuple:
     return tuple(np.digitize(np.asarray(arr), BUCKETS).tolist())
 
 
+def fault_counts(scenario) -> tuple[int, int, int]:
+    """Static ``(preempt, spurious, abort)`` counts of the scheduled faults."""
+    sched = scenario_fault_schedule(scenario)
+    if sched is None:
+        return (0, 0, 0)
+    return (int((sched.kind == F_PREEMPT).sum()),
+            int((sched.kind == F_SPURIOUS).sum()),
+            int((sched.kind == F_ABORT).sum()))
+
+
 def case_signature(scenario, op_row, branch_row, spin_row,
                    commits, wakes, wraps, exit_reason: str) -> tuple:
     """The hashable coverage signature of one case (see module docstring)."""
@@ -65,6 +82,7 @@ def case_signature(scenario, op_row, branch_row, spin_row,
         bucketize(branch_row),
         bucketize(spin_row),
         bucketize([commits, wakes, wraps]),
+        bucketize(fault_counts(scenario)),
     )
 
 
@@ -77,6 +95,7 @@ class CoverageMap:
         self.branch_totals = np.zeros(N_BRANCH_KINDS, np.int64)
         self.spin_totals = np.zeros(N_SPIN_KINDS, np.int64)
         self.event_totals = Counter()            # commits / wakes / wraps
+        self.fault_totals = Counter()            # scheduled preempt/spur/abort
         self.lock_classes: Counter = Counter()   # (lock, class) -> cases
         self.exit_reasons: Counter = Counter()
         self.n_cases = 0
@@ -113,6 +132,11 @@ class CoverageMap:
             self.exit_reasons[exit_reason] += 1
             for cls in sig[1]:
                 self.lock_classes[(sig[0], cls)] += 1
+            pre, spur, ab = fault_counts(s)
+            self.fault_totals["preempt"] += pre
+            self.fault_totals["spurious"] += spur
+            self.fault_totals["abort"] += ab
+            self.fault_totals["fault_cases"] += bool(pre or spur or ab)
         self.op_totals += cov["op_exec"].sum(0)
         self.branch_totals += cov["branch_taken"].sum(0)
         self.spin_totals += cov["spin_sleep"].sum(0)
@@ -127,6 +151,7 @@ class CoverageMap:
         self.branch_totals += other.branch_totals
         self.spin_totals += other.spin_totals
         self.event_totals.update(other.event_totals)
+        self.fault_totals.update(other.fault_totals)
         self.lock_classes.update(other.lock_classes)
         self.exit_reasons.update(other.exit_reasons)
         self.n_cases += other.n_cases
@@ -146,6 +171,7 @@ class CoverageMap:
             "spin_parks": {name: int(self.spin_totals[k])
                            for k, name in enumerate(_SPIN_NAMES)},
             "events": dict(self.event_totals),
+            "scheduled_faults": dict(self.fault_totals),
             "lock_invariant_classes": {
                 f"{lock}:{cls}": n
                 for (lock, cls), n in sorted(self.lock_classes.items())},

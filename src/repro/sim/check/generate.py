@@ -37,6 +37,7 @@ import numpy as np
 
 from .. import isa
 from ..costs import Costs
+from ..faults import FaultSchedule, draw_schedule
 from ..isa import LOCK_STRIDE, OFF_GRANT, OFF_LGRANT, OFF_TICKET
 from ..programs import (INIT_MEM_GEN, Layout, PROG_LEN, SIM_LOCKS,
                         build_mutexbench, build_occupancy_probe,
@@ -59,7 +60,7 @@ PAD_MEM_WORDS = max(
 # deliberately NOT FIFO: the TAS fast path barges.
 TICKET_FIFO_LOCKS = frozenset(
     {"ticket", "twa", "twa-id", "twa-staged", "tkt-dual", "partitioned",
-     "anderson", "twa-rw"})
+     "anderson", "twa-rw", "twa-timo"})
 # Locks whose releases advance the shared OFF_GRANT word (partitioned uses
 # per-sector grant slots, anderson uses waiting-array flags instead;
 # fissile-twa's inner grant is handled by its own conservation branch).
@@ -69,8 +70,10 @@ GRANT_WORD_LOCKS = frozenset(
 # Locks whose ticket/grant words can be seeded near INT32_MAX to fuzz the
 # wrap: free-running OFF_TICKET/OFF_GRANT counters with wrap-safe compares
 # (partitioned/anderson derive slot indices from the raw ticket, so their
-# init state is position-dependent and stays at zero).
-WRAP_SEED_LOCKS = GRANT_WORD_LOCKS | {"fissile-twa"}
+# init state is position-dependent and stays at zero).  twa-timo is
+# excluded: its abandonment marker ``~tk`` relies on live tickets being
+# non-negative, which a near-INT32_MAX seed breaks mid-run.
+WRAP_SEED_LOCKS = (GRANT_WORD_LOCKS | {"fissile-twa"}) - {"twa-timo"}
 INT32_MAX = 2**31 - 1
 
 
@@ -109,7 +112,20 @@ class Scenario:
                     n_active=self.n_active, seed=self.seed,
                     wa_base=self.wa_base, wa_size=self.wa_size,
                     horizon=self.horizon, max_events=self.max_events,
-                    costs=self.costs)
+                    costs=self.costs, faults=scenario_faults(self))
+
+
+def scenario_faults(scenario) -> FaultSchedule | None:
+    """The scenario's fault schedule (``meta["faults"]``), or ``None``.
+
+    Schedules ride in ``meta`` as JSON-serializable row lists, so they
+    survive the ``.npz`` corpus round-trip unchanged.
+    """
+    rows = scenario.meta.get("faults")
+    if not rows:
+        return None
+    sched = FaultSchedule.from_lists(rows)
+    return sched if len(sched) else None
 
 
 def gen_costs(rng: np.random.Generator) -> np.ndarray:
@@ -147,6 +163,7 @@ def gen_geometry(rng: np.random.Generator, lock: str | None = None) -> dict:
         long_term_threshold=int(rng.integers(1, 4)),
         sem_permits=int(rng.integers(1, n_threads + 1)),
         reader_fraction=int(rng.choice((0, 10, 30, 50, 70, 90, 100))),
+        timo_patience=int(rng.integers(1, 49)),
         ticket_base=ticket_base,
         horizon=int(rng.integers(1_500, 4_000)),
         max_events=6_000,
@@ -322,7 +339,8 @@ def gen_composed_scenario(rng: np.random.Generator,
                     long_term_threshold=geo["long_term_threshold"],
                     sem_permits=geo["sem_permits"],
                     reader_fraction=geo["reader_fraction"],
-                    count_collisions=count_collisions)
+                    count_collisions=count_collisions,
+                    timo_patience=geo["timo_patience"])
     cs_work = int(rng.integers(0, 7))
     ncs_max = int(rng.integers(0, 33))
     rw = lock == "twa-rw"
@@ -375,23 +393,86 @@ def gen_composed_scenario(rng: np.random.Generator,
                        "long_term_threshold": geo["long_term_threshold"],
                        "sem_permits": geo["sem_permits"],
                        "reader_fraction": geo["reader_fraction"],
-                       "count_collisions": count_collisions},
+                       "count_collisions": count_collisions,
+                       "timo_patience": geo["timo_patience"]},
         },
     )
 
 
+def _harness_body_span(program: np.ndarray) -> tuple[int, int] | None:
+    """``[lo, hi)`` of a random program's harness body, or ``None``.
+
+    Recovers the :func:`gen_random_program` structure from the rows alone:
+    row 0 is the counter MOVI and the epilogue is the unique
+    ``ADDI R_NX, R_NX, -1`` / ``BGTI R_NX -> 1`` pair.  Anything that does
+    not match (composed lock programs, hand-built cases) returns ``None``
+    and is not spliced.
+    """
+    prog = np.asarray(program)
+    if len(prog) < 4 or prog[0][0] != isa.MOVI or prog[0][1] != _CTR:
+        return None
+    for i in range(1, len(prog) - 2):
+        if (tuple(prog[i]) == (isa.ADDI, _CTR, _CTR, 0, -1)
+                and prog[i + 1][0] == isa.BGTI and prog[i + 1][1] == _CTR
+                and prog[i + 1][4] == 1 and prog[i + 2][0] == isa.HALT):
+            return (1, i) if i > 1 else None
+    return None
+
+
+def splice_programs(target: np.ndarray, donor: np.ndarray,
+                    rng: np.random.Generator) -> np.ndarray | None:
+    """Copy an instruction range from ``donor``'s body into ``target``'s.
+
+    Both programs must carry the guaranteed-HALT harness
+    (:func:`_harness_body_span`); the spliced rows keep their position
+    relative to the body start and every branch target among them is
+    remapped into the *target* body, so the result is still well-formed:
+    harness rows untouched, all control flow confined to the body, HALT
+    reached after the counter runs out.  Returns ``None`` when either
+    program has no recoverable harness.
+    """
+    tspan, dspan = _harness_body_span(target), _harness_body_span(donor)
+    if tspan is None or dspan is None:
+        return None
+    tlo, thi = tspan
+    dlo, dhi = dspan
+    max_len = min(thi - tlo, dhi - dlo)
+    if max_len < 1:
+        return None
+    n = int(rng.integers(1, max_len + 1))
+    dst = tlo + int(rng.integers(0, (thi - tlo) - n + 1))
+    src = dlo + int(rng.integers(0, (dhi - dlo) - n + 1))
+    out = np.asarray(target).copy()
+    rows = np.asarray(donor)[src:src + n].copy()
+    for r in rows:
+        if isa.OPCODES[int(r[0])].imm == "target":
+            r[4] = tlo + (int(r[4]) - tlo) % (thi - tlo)
+    out[dst:dst + n] = rows
+    return out
+
+
 def mutate_scenario(scenario: Scenario, rng: np.random.Generator,
-                    n_mutations: int = 1) -> Scenario:
-    """Coverage-steering mutation: perturb a promoted case, NEVER its program.
+                    n_mutations: int = 1,
+                    pool: list | None = None) -> Scenario:
+    """Coverage-steering mutation: perturb a promoted case's neighbourhood.
 
     The program (and with it the layout/addresses it was generated against)
     is what made the case's coverage signature novel; the mutations search
     the *neighbourhood* of that behaviour — PRNG seed, coherence costs,
     horizon, active-thread count (reduce-only, so the probed layout stays an
     upper bound for every invariant), the pinned scheduler/pallas placement,
+    a redraw of the fault schedule when the case carries one,
     and — for ticket-family locks — re-seeding the ticket/grant counters
     just below ``INT32_MAX`` so the mutant crosses the wrap even if its
     parent did not.
+
+    With a donor ``pool``, *random* scenarios additionally admit program
+    **splicing** (:func:`splice_programs`): an instruction range from
+    another random pool member's harness body replaces part of this one's,
+    branch targets fixed up, guaranteed-HALT preserved — the one mutation
+    that makes new control-flow shapes reachable without a uniform redraw.
+    Composed lock programs are never spliced (their meta invariants assume
+    the lock assembly is intact).
     """
     # deferred import: runner imports generate at module level
     from .runner import PALLAS_CHUNK_POOL, SCHED_GEOMETRY_POOL
@@ -401,6 +482,13 @@ def mutate_scenario(scenario: Scenario, rng: np.random.Generator,
         ops.append("n_active")
     if s.kind == "composed" and s.lock in WRAP_SEED_LOCKS:
         ops.append("ticket_base")
+    if s.meta.get("faults"):
+        ops.append("faults")
+    donors = [d for d in (pool or [])
+              if d.kind == "random" and d is not scenario] \
+        if s.kind == "random" else []
+    if donors:
+        ops.append("splice")
     for _ in range(max(1, n_mutations)):
         op = str(rng.choice(ops))
         if op == "seed":
@@ -419,6 +507,13 @@ def mutate_scenario(scenario: Scenario, rng: np.random.Generator,
         elif op == "pallas_chunk":
             ch = PALLAS_CHUNK_POOL[int(rng.integers(len(PALLAS_CHUNK_POOL)))]
             s = s.replace(meta={**s.meta, "pallas_chunk": int(ch)})
+        elif op == "faults":
+            s = with_fault_schedule(s, rng)
+        elif op == "splice":
+            donor = donors[int(rng.integers(len(donors)))]
+            spliced = splice_programs(s.program, donor.program, rng)
+            if spliced is not None:
+                s = s.replace(program=spliced)
         else:  # ticket_base: same words gen_composed_scenario itself seeds
             tb = int(INT32_MAX - rng.integers(0, 12))
             init_mem = np.asarray(s.init_mem).copy()
@@ -433,19 +528,57 @@ def mutate_scenario(scenario: Scenario, rng: np.random.Generator,
     return s
 
 
+def with_fault_schedule(scenario: Scenario,
+                        rng: np.random.Generator) -> Scenario:
+    """Attach (or redraw) a random fault schedule on ``scenario``.
+
+    Draws 0-3 preemptions, 0-3 spurious wakes and 0-1 aborts (at least one
+    fault total), confined to the first ~2000 events so schedules bite even
+    on cells that exit early, and stores the schedule as JSON-serialisable
+    rows in ``meta["faults"]`` — the canonical carrier every execution path
+    (:meth:`Scenario.engine_kwargs`, the batch oracle, the sweep runner)
+    reads via :func:`scenario_faults`.
+    """
+    n_pre = int(rng.integers(0, 4))
+    n_spur = int(rng.integers(0, 4))
+    n_abort = int(rng.integers(0, 2))
+    if n_pre + n_spur + n_abort == 0:
+        n_pre = 1
+    sched = draw_schedule(rng, n_active=scenario.n_active,
+                          max_events=scenario.max_events,
+                          n_preempt=n_pre, n_spurious=n_spur,
+                          n_abort=n_abort,
+                          evt_span=min(scenario.max_events, 2000))
+    return scenario.replace(meta={**scenario.meta,
+                                  "faults": sched.to_lists()})
+
+
 def generate_batch(n_cases: int, seed: int,
-                   composed_fraction: float = 0.6) -> list[Scenario]:
+                   composed_fraction: float = 0.6,
+                   fault_fraction: float = 0.0) -> list[Scenario]:
     """A deterministic mixed batch: ``composed_fraction`` of the cases wrap
-    the ``SIM_LOCKS`` generators round-robin (so any batch of >= 13/0.6 =
-    22 cases covers every lock at least once), the rest are random ISA
-    programs."""
+    the ``SIM_LOCKS`` generators round-robin (so any batch of >= 14/0.6 =
+    24 cases covers every lock at least once), the rest are random ISA
+    programs.
+
+    ``fault_fraction`` of the cases additionally carry a random fault
+    schedule (:func:`with_fault_schedule`).  The schedules come from a
+    *separate* PRNG stream keyed off ``seed``, so ``fault_fraction=0``
+    reproduces historical batches byte-for-byte and raising it never
+    perturbs the underlying scenarios — only decorates them.
+    """
     rng = np.random.default_rng(seed)
-    n_composed = min(n_cases, int(round(n_cases * composed_fraction)))
+    fault_rng = np.random.default_rng((int(seed) ^ 0xFA017) & 0xFFFFFFFF)
     out = []
+    n_composed = min(n_cases, int(round(n_cases * composed_fraction)))
     for i in range(n_cases):
         if i < n_composed:
             lock = SIM_LOCKS[i % len(SIM_LOCKS)]
             out.append(gen_composed_scenario(rng, lock))
         else:
             out.append(gen_random_scenario(rng))
+    if fault_fraction > 0:
+        out = [with_fault_schedule(s, fault_rng)
+               if fault_rng.random() < fault_fraction else s
+               for s in out]
     return out

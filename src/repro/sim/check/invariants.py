@@ -28,10 +28,28 @@ lock semantics, not from engine internals:
     the oracle's FADD trace (``Trace.fadds``).
   * ``deadlock``     — a composed scenario (infinite-loop workload) must be
     cut by the horizon or event budget, never reach the "stalled" state
-    where every thread is parked and no store is pending.
-  * ``progress``     — at least one acquisition within the horizon.
+    where every thread is parked and no store is pending.  Gated OFF when
+    the scenario carries a fault schedule: an aborted lock holder
+    legitimately stalls every strict-FIFO waiter behind it.
+  * ``progress``     — at least one acquisition within the horizon.  Also
+    gated OFF under faults (a preemption burst can eat the whole horizon).
   * ``collision``    — with ``count_collisions``, per-thread futile wakeups
     never exceed total wakeups.
+  * ``lost_grant``   — universal wakeup soundness, *including* under
+    faults: a thread still parked at exit must have a genuinely
+    unsatisfied SPIN predicate against final committed memory.  Any
+    committed write to the watched word wakes its watchers (a spurious
+    wake merely re-checks, a preemption only delays the resume), so a
+    parked thread whose predicate holds witnesses a lost wakeup.
+  * ``recovery``     — bounded recovery: a composed scenario whose fault
+    schedule contains no aborts (preemptions and spurious wakes only —
+    every thread stays schedulable) must still never stall; transient
+    faults may slow the lock down but must not wedge it.
+  * ``abandoned``    — ``twa-timo`` ticket accounting: timed-out waiters
+    abandon their tickets, so the ticket family's books gain an
+    ``abandoned`` column (every draw is either acquired, abandoned, or
+    still in flight) and the releaser-side ``skipped`` counter never
+    exceeds abandonments plus in-flight markers.
 
 Each check returns a list of human-readable violation strings (empty = ok).
 """
@@ -42,10 +60,27 @@ from bisect import bisect_right
 
 import numpy as np
 
+from .. import isa
+from ..faults import F_ABORT, FaultSchedule
 from ..isa import LOCK_STRIDE, OFF_GRANT, OFF_TICKET
-from ..programs import (Layout, OCC_OFF, RW_WRITER_W, VIOL_OFF,
+from ..programs import (Layout, OCC_OFF, RW_WRITER_W,
+                        TIMO_ABANDONED_OFF, TIMO_SKIPPED_OFF, VIOL_OFF,
                         read_collision_counters)
 from .oracle import Trace, _w32
+
+
+def scenario_fault_schedule(scenario) -> FaultSchedule | None:
+    """The scenario's fault schedule from ``meta["faults"]``, or ``None``.
+
+    Duplicated from ``generate.scenario_faults`` only to keep this module
+    import-light (it must not pull the generator stack in); both read the
+    same canonical ``meta`` rows.
+    """
+    rows = scenario.meta.get("faults")
+    if not rows:
+        return None
+    sched = FaultSchedule.from_lists(rows)
+    return sched if len(sched) else None
 
 
 def _lock_bases(n_locks: int) -> list[int]:
@@ -109,6 +144,8 @@ def check_conservation(scenario, mem: np.ndarray,
     if (not scenario.meta.get("ticket_fifo") and scenario.lock != "twa-sem"
             and not fissile):
         return []
+    if scenario.lock == "twa-timo":
+        return []  # abandoned tickets break these books; see check_abandoned
     init_mem = np.asarray(scenario.init_mem)
     n_threads = scenario.meta["layout"]["n_threads"]
     total_acq = int(np.asarray(stats["acquisitions"]).sum())
@@ -168,6 +205,8 @@ def check_liveness(scenario, trace: Trace) -> list[str]:
     """
     if not scenario.meta.get("ticket_fifo"):
         return []
+    if scenario.lock == "twa-timo":
+        return []  # a timed-out drawer legitimately watches grants go by
     layout = scenario.meta["layout"]
     n_locks, n_threads = layout["n_locks"], layout["n_threads"]
     bound = n_threads
@@ -206,6 +245,8 @@ def check_liveness(scenario, trace: Trace) -> list[str]:
 def check_deadlock(scenario, trace: Trace) -> list[str]:
     if scenario.kind != "composed":
         return []  # random programs may legitimately park forever
+    if scenario_fault_schedule(scenario) is not None:
+        return []  # an aborted holder stalls FIFO waiters; see recovery
     if trace.exit_reason == "stalled":
         return ["deadlock: every thread parked with no pending store "
                 f"before the horizon (exit={trace.exit_reason})"]
@@ -215,10 +256,141 @@ def check_deadlock(scenario, trace: Trace) -> list[str]:
 def check_progress(scenario, stats: dict) -> list[str]:
     if scenario.kind != "composed":
         return []
+    if scenario_fault_schedule(scenario) is not None:
+        return []  # a preemption burst may eat the whole horizon
     if int(np.asarray(stats["acquisitions"]).sum()) < 1:
         return [f"progress: no acquisition within horizon "
                 f"{scenario.horizon}"]
     return []
+
+
+def check_recovery(scenario, trace: Trace) -> list[str]:
+    """Bounded recovery from transient faults (no-abort schedules).
+
+    Preemptions and spurious wakes leave every thread schedulable: a
+    preempted thread resumes after its window, a spuriously woken one
+    re-executes its SPIN.  A composed workload must therefore still never
+    reach the "stalled" terminal state — transient faults may slow the
+    lock down, never wedge it.  (Abort schedules fall outside the gate:
+    killing a lock holder legitimately stalls strict-FIFO waiters.)
+    """
+    if scenario.kind != "composed":
+        return []
+    sched = scenario_fault_schedule(scenario)
+    if sched is None or (sched.kind == F_ABORT).any():
+        return []
+    if trace.exit_reason == "stalled":
+        return ["recovery: stalled under a transient-only fault schedule "
+                "(preempt/spurious faults must never wedge a composed "
+                "workload)"]
+    return []
+
+
+_SPIN_OPS = (isa.SPIN_EQ, isa.SPIN_NE, isa.SPIN_EQI, isa.SPIN_NEI,
+             isa.SPIN_GE)
+
+
+def check_lost_grant(scenario, mem: np.ndarray, trace: Trace) -> list[str]:
+    """No lost grants: every still-parked thread's predicate is really false.
+
+    Sound for every scenario kind, fault schedule or not: a thread parks
+    only when its SPIN predicate fails, any committed write to the watched
+    word wakes all its watchers (clearing their parked state *at wake
+    time*, before they re-execute the SPIN), a spurious wake merely
+    re-checks, and a preemption only delays the resume.  So a thread still
+    parked at exit watched a word that was never subsequently written —
+    if final committed memory satisfies its predicate anyway, a wakeup was
+    lost somewhere between the store path and the waiting array.
+
+    Re-evaluates the predicate exactly as the oracle does (same wrap-safe
+    compare, same Python-list negative indexing for the one pathological
+    negative-address case random programs can build).
+    """
+    spin = getattr(trace, "final_spin_addr", None)
+    if not spin:
+        return []  # trace predates the fault work or thread state elided
+    pcs, regs = trace.final_pc, trace.final_regs
+    prog = np.asarray(scenario.program)
+    mem = np.asarray(mem)
+    M = len(mem)
+    problems = []
+    for t, addr in enumerate(spin):
+        addr = int(addr)
+        if addr < 0 or t >= len(pcs):
+            continue
+        pc_t = int(pcs[t])
+        if not 0 <= pc_t < len(prog):
+            continue
+        op, a, _b, c_, _imm = (int(x) for x in prog[pc_t])
+        if op not in _SPIN_OPS or addr >= M:
+            continue  # deferred/OOB cell: predicate not re-derivable here
+        ra = int(regs[t][a])
+        val = int(mem[addr])
+        satisfied = {isa.SPIN_EQ: val == ra, isa.SPIN_NE: val != ra,
+                     isa.SPIN_EQI: val == c_, isa.SPIN_NEI: val != c_,
+                     isa.SPIN_GE: _w32(val - ra) >= 0}[op]
+        if satisfied:
+            problems.append(
+                f"lost_grant: thread {t} parked at pc {pc_t} on word "
+                f"{addr} whose final value {val} satisfies its SPIN "
+                f"predicate — its wakeup was lost")
+    return problems
+
+
+def check_abandoned(scenario, mem: np.ndarray, stats: dict) -> list[str]:
+    """``twa-timo`` ticket books, with an ``abandoned`` column.
+
+    Every drawn ticket is acquired, abandoned, or still in flight; the
+    releaser's skip loop consumes at most one marker per abandonment (plus
+    markers whose abandoner has SWAPped but not yet bumped the abandoned
+    counter — at most one per thread); grants trail draws.  All
+    differences are wrapped int32 against the scenario's own initial
+    memory, mirroring ``check_conservation``.
+    """
+    if scenario.lock != "twa-timo":
+        return []
+    init_mem = np.asarray(scenario.init_mem)
+    n_threads = scenario.meta["layout"]["n_threads"]
+    total_acq = int(np.asarray(stats["acquisitions"]).sum())
+    problems = []
+    draws = grants = abandoned = skipped = 0
+    for lidx, base in enumerate(_lock_bases(
+            scenario.meta["layout"]["n_locks"])):
+        draws_l = _w32(int(mem[base + OFF_TICKET])
+                       - int(init_mem[base + OFF_TICKET]))
+        grants_l = _w32(int(mem[base + OFF_GRANT])
+                        - int(init_mem[base + OFF_GRANT]))
+        ab_l = _w32(int(mem[base + TIMO_ABANDONED_OFF])
+                    - int(init_mem[base + TIMO_ABANDONED_OFF]))
+        sk_l = _w32(int(mem[base + TIMO_SKIPPED_OFF])
+                    - int(init_mem[base + TIMO_SKIPPED_OFF]))
+        if ab_l < 0 or sk_l < 0:
+            problems.append(
+                f"abandoned: lock {lidx} negative counter "
+                f"(abandoned={ab_l}, skipped={sk_l})")
+        if draws_l - grants_l < 0:
+            problems.append(
+                f"abandoned: lock {lidx} grant {grants_l} ran past "
+                f"ticket {draws_l}")
+        draws += draws_l
+        grants += grants_l
+        abandoned += ab_l
+        skipped += sk_l
+    if not (total_acq + abandoned <= draws
+            <= total_acq + abandoned + n_threads):
+        problems.append(
+            f"abandoned: draws {draws} vs acquisitions {total_acq} + "
+            f"abandoned {abandoned}: drawn-but-unresolved outside "
+            f"[0, {n_threads}]")
+    if skipped > abandoned + n_threads:
+        problems.append(
+            f"abandoned: releaser skipped {skipped} markers but only "
+            f"{abandoned} abandonments completed (+{n_threads} in-flight "
+            f"max)")
+    if grants > draws:
+        problems.append(
+            f"abandoned: grants {grants} exceed draws {draws}")
+    return problems
 
 
 def check_collisions(scenario, mem: np.ndarray) -> list[str]:
@@ -249,18 +421,27 @@ def active_classes(scenario) -> tuple[str, ...]:
     engine on every stat) applies to every case and is included for all.
     """
     meta = scenario.meta
-    classes = ["differential"]
+    sched = scenario_fault_schedule(scenario)
+    classes = ["differential", "lost_grant"]
     if meta.get("probed"):
         classes.append("exclusion")
     fissile = meta.get("fissile", False)
-    if meta.get("ticket_fifo") or scenario.lock == "twa-sem" or fissile:
+    if ((meta.get("ticket_fifo") or scenario.lock == "twa-sem" or fissile)
+            and scenario.lock != "twa-timo"):
         classes.append("conservation")
     if meta.get("ticket_fifo"):
-        classes += ["fifo", "liveness"]
+        classes.append("fifo")
+        if scenario.lock != "twa-timo":
+            classes.append("liveness")
     if scenario.kind == "composed":
-        classes += ["deadlock", "progress"]
+        if sched is None:
+            classes += ["deadlock", "progress"]
+        elif not (sched.kind == F_ABORT).any():
+            classes.append("recovery")
     if meta.get("count_collisions"):
         classes.append("collision")
+    if scenario.lock == "twa-timo":
+        classes.append("abandoned")
     return tuple(sorted(classes))
 
 
@@ -275,4 +456,7 @@ def check_invariants(scenario, stats: dict, trace: Trace) -> list[str]:
     problems += check_deadlock(scenario, trace)
     problems += check_progress(scenario, stats)
     problems += check_collisions(scenario, mem)
+    problems += check_recovery(scenario, trace)
+    problems += check_lost_grant(scenario, mem, trace)
+    problems += check_abandoned(scenario, mem, stats)
     return problems

@@ -255,6 +255,47 @@ def make_wrap_entries(out_dir):
         yield name, s
 
 
+def make_fault_entries(out_dir):
+    """Composed scenarios decorated with fault schedules that must replay
+    CLEAN (``expect_classes=[]``) across every sweep mode — the regression
+    pins for the fault semantics themselves.  Each entry is kept only if
+    every scheduled fault actually landed inside the run (an entry whose
+    faults are scheduled past the executed-event count would pin nothing).
+    One entry per fault kind, plus a timed-lock (``twa-timo``) entry whose
+    abandonment accounting runs under preemption.
+    """
+    from ..faults import draw_schedule
+    from .runner import run_oracle_case
+    rng = np.random.default_rng(SEED + 2)
+    recipes = (
+        ("fault_preempt_ticket", "ticket", dict(n_preempt=3)),
+        ("fault_spurious_twa", "twa", dict(n_spurious=3)),
+        ("fault_abort_ticket", "ticket", dict(n_abort=1, n_preempt=1)),
+        ("fault_preempt_twa_timo", "twa-timo", dict(n_preempt=2)),
+    )
+    for name, lock, kinds in recipes:
+        for _ in range(80):
+            s = gen_composed_scenario(rng, lock, n_locks=1)
+            sched = draw_schedule(rng, n_active=s.n_active,
+                                  max_events=s.max_events,
+                                  evt_span=min(s.max_events, 1200), **kinds)
+            s = s.replace(meta={**s.meta, "faults": sched.to_lists()})
+            _out, trace = run_oracle_case(s)
+            if len(trace.faults_applied) < len(sched):
+                continue  # a fault landed past the run's end: pins nothing
+            if case_problems(s, modes=("map", "vmap", "sched")):
+                continue
+            s = s.replace(meta={**s.meta, "expect_classes": []})
+            save_scenario(os.path.join(out_dir, f"{name}.npz"), s,
+                          note=f"{lock} under scheduled faults {kinds}; "
+                               "every fault lands in-run; must replay "
+                               "with zero problems")
+            yield name, s
+            break
+        else:  # pragma: no cover - deterministic seed finds one quickly
+            raise AssertionError(f"no clean {name} case found")
+
+
 def run_oracle_mem(scenario):
     from .oracle import run_oracle
     return np.asarray(
@@ -283,7 +324,8 @@ def main(out_dir="tests/corpus"):
     from .runner import count_instructions
     for name, s in (*make_diff_entries(out_dir),
                     *make_invariant_entries(out_dir),
-                    *make_wrap_entries(out_dir)):
+                    *make_wrap_entries(out_dir),
+                    *make_fault_entries(out_dir)):
         print(f"{name}: {count_instructions(s.program)} instrs, "
               f"{s.n_active} threads, horizon {s.horizon}, "
               f"expect={s.meta['expect_classes']}")

@@ -29,6 +29,7 @@ from .. import isa
 from ..costs import (DEFAULT_COSTS, I_ATOMIC, I_HIT, I_INV, I_LOCAL, I_MISS,
                      I_ST_OWNED, I_ST_SHARED, I_WAKE, I_XFER, Costs)
 from ..engine import EVENT_ORDER_CONTRACT, INF as _INF
+from ..faults import F_ABORT, F_PREEMPT, F_SPURIOUS, FaultSchedule
 
 INF = int(_INF)
 
@@ -41,6 +42,8 @@ ORACLE_MUTATIONS = {
                  "spinners (breaks SPIN wakeup semantics)",
     "free_invalidation": "stores never pay the per-sharer C_INV bill "
                          "(breaks the invalidation-diameter cost model)",
+    "dropped_fault": "the fault schedule is silently ignored (breaks "
+                     "preemption/spurious-wake/abort injection semantics)",
 }
 
 
@@ -58,6 +61,14 @@ class Trace:
     # happen again AND at least one thread is parked on a spin — a genuine
     # lost-wakeup/deadlock state), or "halted" (every thread ran to HALT)
     exit_reason: str = ""
+    # (event_index, kind, thread) per fault actually applied (a spurious
+    # wake on a non-parked thread still records — the schedule fired)
+    faults_applied: list = field(default_factory=list)
+    # final per-thread observations the robustness invariants consume:
+    # a still-parked thread's watched address (or -1) and its pc
+    final_spin_addr: list = field(default_factory=list)
+    final_pc: list = field(default_factory=list)
+    final_regs: list = field(default_factory=list)
 
 
 def _w32(x: int) -> int:
@@ -92,13 +103,16 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
                seed: int = 1, costs: Costs | np.ndarray = DEFAULT_COSTS,
                init_mem: np.ndarray | None = None,
                n_active: int | None = None, trace: Trace | None = None,
-               mutate: tuple = ()) -> dict:
+               mutate: tuple = (), faults=None) -> dict:
     """Interpret one cell sequentially; returns engine-identical raw stats.
 
     The returned dict carries exactly the fields ``engine.run_sweep`` emits
     per cell (``acquisitions``, ``waited_acquisitions``, ``handover_sum``,
     ``handover_count``, ``events``, ``sleeping``, ``grant_value``) so the
-    differential runner can compare them verbatim.
+    differential runner can compare them verbatim.  ``faults`` is an
+    optional :class:`repro.sim.faults.FaultSchedule` (or its ``to_lists``
+    row form) applied under the extended fault clause of
+    :data:`EVENT_ORDER_CONTRACT`.
     """
     assert wa_size & (wa_size - 1) == 0
     for m in mutate:
@@ -106,6 +120,17 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
     eager_store = "eager_store" in mutate
     lost_wake = "lost_wake" in mutate
     free_inv = "free_invalidation" in mutate
+    dropped_fault = "dropped_fault" in mutate
+
+    if faults is not None and not isinstance(faults, FaultSchedule):
+        faults = FaultSchedule.from_lists(faults)
+    fault_by_evt: dict[int, tuple[int, int, int]] = {}
+    if faults is not None and not dropped_fault:
+        for fk, fe, ft, fa in zip(faults.kind, faults.evt,
+                                  faults.tid, faults.arg):
+            if int(fk) != 0:
+                assert int(fe) not in fault_by_evt, "duplicate fault evt"
+                fault_by_evt[int(fe)] = (int(fk), int(ft), int(fa))
 
     if isinstance(costs, Costs):
         costs = costs.to_array()
@@ -131,6 +156,7 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
     pend_val = [0] * T
     pend_time = [0] * T
     spin_addr = [-1] * T
+    wake_delay = [0] * T
     acq = [0] * T
     waited_acq = [0] * T
     rel_time = [-1] * n_locks
@@ -155,14 +181,18 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
         return cost + (C[I_ATOMIC] if atomic else 0)
 
     def wake_watchers(addr, wake_time):
-        resume = _w32(wake_time + C[I_WAKE])
         for u in range(T):
             if spin_addr[u] == addr:
-                next_time[u] = resume
+                # a woken thread pays any preemption debt accrued while
+                # parked (wake_delay) on top of C_WAKE, then the debt clears
+                next_time[u] = _w32(wake_time + C[I_WAKE] + wake_delay[u])
+                wake_delay[u] = 0
                 spin_addr[u] = -1
 
-    while True:
-        # --- event selection (EVENT_ORDER_CONTRACT) -----------------------
+    def select():
+        """Event selection (EVENT_ORDER_CONTRACT): earliest commit wins a
+        tie against the earliest thread op; lowest index wins within a
+        half."""
         t_cm, tc = INF, 0
         for u in range(T):
             if pend_addr[u] >= 0 and pend_time[u] < t_cm:
@@ -171,6 +201,10 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
         for u in range(T):
             if next_time[u] < t_th:
                 t_th, tt = next_time[u], u
+        return t_cm, tc, t_th, tt
+
+    while True:
+        t_cm, tc, t_th, tt = select()
         now = min(t_cm, t_th)
         if not (events < max_events and now < horizon):
             if trace is not None:
@@ -182,7 +216,43 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
                     trace.exit_reason = "stalled"
                 else:
                     trace.exit_reason = "halted"
+                trace.final_spin_addr = list(spin_addr)
+                trace.final_pc = list(pc)
+                trace.final_regs = [list(r) for r in regs]
             break
+
+        # --- fault phase (extended EVENT_ORDER_CONTRACT) ------------------
+        # An entry matching the current event counter mutates the timelines
+        # as a persisted state change, then the event re-selects; if the
+        # fault pushed every timeline past the horizon, no event executes
+        # and the counter does not advance (the loop exits on re-check).
+        fe = fault_by_evt.get(events)
+        if fe is not None:
+            kind, ftid, farg = fe
+            if trace is not None:
+                trace.faults_applied.append((events, kind, ftid))
+            if kind == F_PREEMPT:
+                if next_time[ftid] < INF:
+                    next_time[ftid] = _w32(next_time[ftid] + farg)
+                else:
+                    # parked/halted: the debt is paid at the next wake
+                    wake_delay[ftid] = _w32(wake_delay[ftid] + farg)
+            elif kind == F_SPURIOUS:
+                if spin_addr[ftid] >= 0:
+                    # resume with pc still on the SPIN op: re-pay the load,
+                    # re-check, re-park if the condition still fails
+                    next_time[ftid] = _w32(now + C[I_WAKE] + wake_delay[ftid])
+                    wake_delay[ftid] = 0
+                    spin_addr[ftid] = -1
+            else:
+                assert kind == F_ABORT, kind
+                next_time[ftid] = INF
+                spin_addr[ftid] = -1  # dead, not parked: never wakeable
+            t_cm, tc, t_th, tt = select()
+            now = min(t_cm, t_th)
+            if now >= horizon:
+                continue
+
         events += 1
         is_commit = t_cm <= t_th  # tie resolves to the commit
 

@@ -17,8 +17,9 @@ import numpy as np
 
 from .. import engine
 from ..engine_pallas import DEFAULT_PALLAS_CHUNK
+from ..faults import FaultSchedule, stack_schedules
 from .batch_oracle import run_batch_oracle
-from .generate import Scenario
+from .generate import Scenario, scenario_faults
 from .invariants import check_invariants
 from .oracle import Trace, run_oracle
 
@@ -146,6 +147,11 @@ def _dispatch_grouped(scenarios, mode, keys, kwargs_of) -> list[dict]:
 def _dispatch_batch(scenarios: list[Scenario], mode: str,
                     **kw) -> list[dict]:
     s0 = scenarios[0]
+    scheds = [scenario_faults(s) for s in scenarios]
+    if any(sc is not None for sc in scheds):
+        kw["faults"] = stack_schedules(
+            [sc if sc is not None else FaultSchedule.empty()
+             for sc in scheds])
     raw = engine.run_sweep(
         np.stack([s.program for s in scenarios]),
         mem_words=s0.mem_words, n_locks=s0.n_locks,
@@ -277,7 +283,8 @@ class SteerResult:
 def steer(n_cases: int, seed: int, modes: tuple = MODES,
           coverage=None, pool: list | None = None, batch_size: int = 256,
           mutate_fraction: float = 0.5, pool_cap: int = 512,
-          composed_fraction: float = 0.6) -> SteerResult:
+          composed_fraction: float = 0.6,
+          fault_fraction: float = 0.0) -> SteerResult:
     """Coverage-guided fuzzing: novel cases are promoted and mutated.
 
     Runs ``n_cases`` through :func:`fuzz` (batch oracle + coverage) in
@@ -285,9 +292,14 @@ def steer(n_cases: int, seed: int, modes: tuple = MODES,
     map are promoted into ``pool``; once the pool is non-empty, each round
     draws ``mutate_fraction`` of its cases by mutating pool members
     (:func:`~repro.sim.check.generate.mutate_scenario` — geometry, seeds,
-    costs, ticket wrap seeding, scheduler placement; never the program) in
-    preference to uniform redraw.  The pool is FIFO-capped at ``pool_cap``
-    so long runs keep mutating *recent* frontier cases.
+    costs, ticket wrap seeding, scheduler placement, fault schedules, and
+    program splicing between pool members) in preference to uniform
+    redraw.  The pool is FIFO-capped at ``pool_cap`` so long runs keep
+    mutating *recent* frontier cases.
+
+    ``fault_fraction`` of each freshly generated round is decorated with a
+    drawn fault schedule (see ``generate_batch``); mutation then keeps
+    redrawing those schedules on promoted cases.
 
     Passing an existing ``coverage`` map (e.g. loaded from a previous
     nightly's artifact) makes novelty judgments cumulative across runs.
@@ -306,13 +318,15 @@ def steer(n_cases: int, seed: int, modes: tuple = MODES,
         n = min(batch_size, n_cases - done)
         n_mut = min(int(round(n * mutate_fraction)), n) if pool else 0
         batch = [mutate_scenario(pool[int(rng.integers(len(pool)))], rng,
-                                 n_mutations=int(rng.integers(1, 4)))
+                                 n_mutations=int(rng.integers(1, 4)),
+                                 pool=pool)
                  for _ in range(n_mut)]
         batch += generate_batch(n - n_mut,
                                 seed=int((np.uint32(seed)
                                           + np.uint32(7919 * round_i))
                                          & np.uint32(0x7FFFFFFF)),
-                                composed_fraction=composed_fraction)
+                                composed_fraction=composed_fraction,
+                                fault_fraction=fault_fraction)
         # stamp before fuzz so promoted scenarios carry their placement
         # pins (fuzz re-stamps idempotently)
         batch = stamp_sched_geometry(batch, seed + round_i)

@@ -77,6 +77,7 @@ import numpy as np
 from . import isa
 from .costs import (DEFAULT_COSTS, I_ATOMIC, I_HIT, I_INV, I_LOCAL, I_MISS,
                     I_ST_OWNED, I_ST_SHARED, I_WAKE, I_XFER, Costs)
+from .faults import F_ABORT, F_PREEMPT, F_SPURIOUS, FaultSchedule
 from .programs import PROG_LEN, pad_program
 
 INF = np.int32(1 << 29)
@@ -93,7 +94,19 @@ EVENT_ORDER_CONTRACT = (
     "times] vector, first-minimum wins: a commit/thread-op tie resolves to "
     "the commit, ties within a half resolve to the lowest thread index; "
     "store commits fire at issue_time + store_cost, woken spinners resume "
-    "at wake_time + C_WAKE and re-pay the refill load on re-execution"
+    "at wake_time + C_WAKE + wake_delay (clearing wake_delay) and re-pay "
+    "the refill load on re-execution; when a fault schedule is present, "
+    "entries whose event index equals the current event counter are applied "
+    "as persisted state mutations BEFORE event selection, gated on the "
+    "pre-fault state being live (events < max_events and earliest pre-fault "
+    "event time < horizon): a preemption adds K to a running thread's "
+    "next_time, or accumulates K into a parked/halted thread's wake_delay; "
+    "a spurious wake resumes a parked thread at pre-fault t_min + C_WAKE + "
+    "wake_delay (clearing wake_delay and spin_addr, pc unchanged); an abort "
+    "sets next_time = INF and spin_addr = -1 (never wakeable); pending "
+    "stores are never touched by faults; the event then selects from the "
+    "post-fault state — if no post-fault event time is below the horizon, "
+    "no event executes and the event counter does not advance"
 )
 
 
@@ -112,6 +125,13 @@ class SimConsts(NamedTuple):
     wa_size: jax.Array     # () int32 per-lock array stride (HASHP)
     horizon: jax.Array     # () int32 stop once every timeline passes this
     max_events: jax.Array  # () int32 hard event-count bound
+    # Optional fault schedule (see repro.sim.faults); None = fault-free, and
+    # None-ness is a Python-level pytree property, so the zero-fault compiled
+    # step contains no fault code at all.
+    f_kind: jax.Array | None = None  # (n_faults,) int32 fault kind, 0 = pad
+    f_evt: jax.Array | None = None   # (n_faults,) int32 global event index
+    f_tid: jax.Array | None = None   # (n_faults,) int32 target thread
+    f_arg: jax.Array | None = None   # (n_faults,) int32 preemption window K
 
 
 class SimState(NamedTuple):
@@ -128,6 +148,7 @@ class SimState(NamedTuple):
     pend_val: jax.Array    # (T,)
     pend_time: jax.Array   # (T,) commit time of the pending store
     spin_addr: jax.Array   # (T,) watched address while parked, or -1
+    wake_delay: jax.Array  # (T,) preemption debt paid at the next wake
     acq: jax.Array         # (T,) lock acquisitions
     waited_acq: jax.Array  # (T,) acquisitions that had to wait
     rel_time: jax.Array    # (n_locks,) last REL timestamp or -1
@@ -184,8 +205,45 @@ def _step(c: SimConsts, s: SimState) -> SimState:
     C = c.costs
 
     (next_time, pc, regs, prng, mem, sharers, dirty,
-     pend_addr, pend_val, pend_time, spin_addr,
+     pend_addr, pend_val, pend_time, spin_addr, wake_delay,
      acq, waited_acq, rel_time, hand_sum, hand_cnt, events) = s
+
+    # ---- fault phase (statically absent when no schedule is attached) ----
+    # Entries matching the current event counter mutate the thread timelines
+    # BEFORE event selection, gated on the PRE-fault state being live — a
+    # finished/stalled lane never advances ``events``, so its remaining
+    # schedule can never fire (and the no-event identity is preserved for
+    # the batched drivers' overshoot steps).  Schedules carry unique event
+    # indices, so at most one entry applies per step and scatter order is
+    # irrelevant.  Post-fault, the normal selection below runs: if the fault
+    # pushed every timeline past the horizon, the step dispatches no-event
+    # and the counter stays put (the mutations themselves persist).
+    fault_on = c.f_kind is not None
+    if fault_on:
+        ptimes0 = jnp.where(pend_addr >= 0, pend_time, INF)
+        pre_min = jnp.minimum(jnp.min(ptimes0), jnp.min(next_time))
+        flive = (events < c.max_events) & (pre_min < c.horizon)
+        hit = flive & (c.f_kind != 0) & (c.f_evt == events)
+        running = next_time < INF
+        # preemption: a running thread's timeline slips K; a parked/halted
+        # thread instead owes K at its next wake (wake_delay)
+        k_add = jnp.zeros(n_threads, jnp.int32).at[c.f_tid].add(
+            jnp.where(hit & (c.f_kind == F_PREEMPT), c.f_arg, 0))
+        next_time = next_time + jnp.where(running, k_add, 0)
+        wake_delay = wake_delay + jnp.where(running, 0, k_add)
+        # spurious wake: a parked thread resumes (pc still on the SPIN op)
+        spur = jnp.zeros(n_threads, jnp.int32).at[c.f_tid].add(
+            (hit & (c.f_kind == F_SPURIOUS)).astype(jnp.int32)) > 0
+        spur = spur & (spin_addr >= 0)
+        next_time = jnp.where(spur, pre_min + C[I_WAKE] + wake_delay,
+                              next_time)
+        wake_delay = jnp.where(spur, 0, wake_delay)
+        spin_addr = jnp.where(spur, -1, spin_addr)
+        # abort: dead forever — not parked (spin_addr = -1), never woken
+        dead = jnp.zeros(n_threads, jnp.int32).at[c.f_tid].add(
+            (hit & (c.f_kind == F_ABORT)).astype(jnp.int32)) > 0
+        next_time = jnp.where(dead, INF, next_time)
+        spin_addr = jnp.where(dead, -1, spin_addr)
 
     # One fused reduction picks the next event: argmin over the concatenated
     # [pending-commit times | thread times] vector.  A tie between the two
@@ -466,9 +524,15 @@ def _step(c: SimConsts, s: SimState) -> SimState:
     actor = jnp.where(is_commit, tc, t)
     adv = e.advance
 
-    # wake watchers of the written line (commit / RMW)
+    # wake watchers of the written line (commit / RMW); a woken thread pays
+    # any preemption debt accrued while parked on top of C_WAKE
     wake = (e.wake_addr >= 0) & (spin_addr == e.wake_addr)
-    nt2 = jnp.where(wake, e.wake_time + C[I_WAKE], next_time)
+    if fault_on:
+        nt2 = jnp.where(wake, e.wake_time + C[I_WAKE] + wake_delay, next_time)
+        wd2 = jnp.where(wake, 0, wake_delay)
+    else:
+        nt2 = jnp.where(wake, e.wake_time + C[I_WAKE], next_time)
+        wd2 = wake_delay
     sp2 = jnp.where(wake, -1, spin_addr)
     # actor park / advance (the actor's own update wins over a wake)
     sp2 = sp2.at[actor].set(jnp.where(e.park_addr >= 0, e.park_addr,
@@ -520,7 +584,7 @@ def _step(c: SimConsts, s: SimState) -> SimState:
     hc2 = hand_cnt + e.hand_inc.astype(jnp.int32)
 
     return SimState(nt2, pc2, regs2, prng2, mem2, sh2, dr2,
-                    pa2, pv2, pt2, sp2,
+                    pa2, pv2, pt2, sp2, wd2,
                     acq2, wacq2, rel2, hs2, hc2,
                     events + live.astype(jnp.int32))
 
@@ -542,6 +606,7 @@ def _initial_state(n_threads: int, mem_words: int, n_locks: int,
         pend_val=jnp.zeros(n_threads, jnp.int32),
         pend_time=jnp.zeros(n_threads, jnp.int32),
         spin_addr=jnp.full(n_threads, -1, jnp.int32),
+        wake_delay=jnp.zeros(n_threads, jnp.int32),
         acq=jnp.zeros(n_threads, jnp.int32),
         waited_acq=jnp.zeros(n_threads, jnp.int32),
         rel_time=jnp.full(n_locks, -1, jnp.int32),
@@ -551,14 +616,23 @@ def _initial_state(n_threads: int, mem_words: int, n_locks: int,
     )
 
 
+def _fault_fields(faults) -> dict:
+    """kwargs for SimConsts from a 0- or 4-tuple of fault arrays."""
+    if not faults:
+        return {}
+    assert len(faults) == 4, len(faults)
+    return dict(zip(("f_kind", "f_evt", "f_tid", "f_arg"), faults))
+
+
 def _make_run(n_threads: int, mem_words: int, n_locks: int):
     """While-loop driver over the single-event step for one shape set."""
 
     def run(program, init_pc, init_regs, init_mem, n_active, seed,
-            horizon, max_events, costs, wa_base, wa_mask, wa_size):
+            horizon, max_events, costs, wa_base, wa_mask, wa_size, *faults):
         c = SimConsts(program=program, costs=costs,
                       wa_base=wa_base, wa_mask=wa_mask, wa_size=wa_size,
-                      horizon=horizon, max_events=max_events)
+                      horizon=horizon, max_events=max_events,
+                      **_fault_fields(faults))
 
         def cond(s: SimState):
             t_th, t_cm = _event_times(s)
@@ -593,11 +667,12 @@ def _make_run_batched(n_threads: int, mem_words: int, n_locks: int):
     n_lines = mem_words // isa.WORDS_PER_SECTOR
 
     def run(program, init_pc, init_regs, init_mem, n_active, seed,
-            horizon, max_events, costs, wa_base, wa_mask, wa_size):
+            horizon, max_events, costs, wa_base, wa_mask, wa_size, *faults):
         n_cells = program.shape[0]
         c = SimConsts(program=program, costs=costs,
                       wa_base=wa_base, wa_mask=wa_mask, wa_size=wa_size,
-                      horizon=horizon, max_events=max_events)
+                      horizon=horizon, max_events=max_events,
+                      **_fault_fields(faults))
         lane_t = jnp.arange(n_threads)[None, :]
         s0 = SimState(
             next_time=jnp.where(lane_t < n_active[:, None], 0, INF
@@ -614,6 +689,7 @@ def _make_run_batched(n_threads: int, mem_words: int, n_locks: int):
             pend_val=jnp.zeros((n_cells, n_threads), jnp.int32),
             pend_time=jnp.zeros((n_cells, n_threads), jnp.int32),
             spin_addr=jnp.full((n_cells, n_threads), -1, jnp.int32),
+            wake_delay=jnp.zeros((n_cells, n_threads), jnp.int32),
             acq=jnp.zeros((n_cells, n_threads), jnp.int32),
             waited_acq=jnp.zeros((n_cells, n_threads), jnp.int32),
             rel_time=jnp.full((n_cells, n_locks), -1, jnp.int32),
@@ -679,7 +755,7 @@ def _make_run_sched(n_threads: int, mem_words: int, n_locks: int,
     """
 
     def run(program, init_pc, init_regs, init_mem, n_active, seed,
-            horizon, max_events, costs, wa_base, wa_mask, wa_size):
+            horizon, max_events, costs, wa_base, wa_mask, wa_size, *faults):
         n_cells = program.shape[0]
         lanes = min(n_lanes, n_cells)
 
@@ -695,7 +771,8 @@ def _make_run_sched(n_threads: int, mem_words: int, n_locks: int,
                 program=program[lc], costs=costs[lc], wa_base=wa_base[lc],
                 wa_mask=wa_mask[lc], wa_size=wa_size[lc],
                 horizon=jnp.where(occupied, horizon[lc], 0),
-                max_events=max_events[lc])
+                max_events=max_events[lc],
+                **{k: v[lc] for k, v in _fault_fields(faults).items()})
 
         vstep = jax.vmap(_step)
 
@@ -766,10 +843,11 @@ def _make_run_sched(n_threads: int, mem_words: int, n_locks: int,
     return run
 
 
-@functools.lru_cache(maxsize=64)
+@functools.lru_cache(maxsize=256)
 def _build_engine(n_threads: int, mem_words: int, n_locks: int, prog_len: int,
                   batched: str | None = None, n_lanes: int = 0,
-                  chunk: int = 0, interpret: bool = False):
+                  chunk: int = 0, interpret: bool = False,
+                  n_faults: int = 0):
     """Compile an engine for a given shape set (everything else is an input).
 
     The cache key is shapes only; ``prog_len`` rides along for cache identity
@@ -778,7 +856,9 @@ def _build_engine(n_threads: int, mem_words: int, n_locks: int, prog_len: int,
     work-stealing lanes keyed additionally on the ``n_lanes``/``chunk``
     geometry, "pallas" = the fused-kernel fast path keyed on ``chunk`` and
     the ``interpret`` flag); either way a sweep is one compile and one
-    dispatch, not one per cell.
+    dispatch, not one per cell.  ``n_faults`` is the fault-schedule capacity:
+    0 builds the fault-free step (no fault code traced at all); > 0 drivers
+    take four trailing ``(B, n_faults)`` schedule arrays.
     """
     if batched == "sched":
         assert not interpret, "interpret only applies to mode='pallas'"
@@ -788,7 +868,8 @@ def _build_engine(n_threads: int, mem_words: int, n_locks: int, prog_len: int,
         from .engine_pallas import make_run_pallas
         assert n_lanes == 0, (batched, n_lanes)
         return jax.jit(make_run_pallas(n_threads, mem_words, n_locks,
-                                       prog_len, chunk, interpret))
+                                       prog_len, chunk, interpret,
+                                       n_faults=n_faults))
     assert n_lanes == 0 and chunk == 0 and not interpret, \
         (batched, n_lanes, chunk, interpret)
     if batched == "vmap":
@@ -804,16 +885,30 @@ def engine_cache_info():
     return _build_engine.cache_info()
 
 
+def _fault_arrays(faults) -> tuple:
+    """Normalize a faults argument to a tuple of four (n_faults,) arrays."""
+    if faults is None:
+        return ()
+    if isinstance(faults, FaultSchedule):
+        faults = faults.padded(max(len(faults), 1))
+    fk, fe, ft, fa = (np.asarray(a, np.int32) for a in faults)
+    assert fk.shape == fe.shape == ft.shape == fa.shape and fk.ndim == 1, \
+        (fk.shape, fe.shape, ft.shape, fa.shape)
+    return (fk, fe, ft, fa)
+
+
 def run_sim(program: np.ndarray, *, n_threads: int, mem_words: int,
             n_locks: int, init_pc: np.ndarray, init_regs: np.ndarray,
             wa_base: int, wa_size: int, horizon: int = 2_000_000,
             max_events: int = 2_000_000, seed: int = 1,
             costs: Costs = DEFAULT_COSTS, init_mem: np.ndarray | None = None,
-            n_active: int | None = None) -> dict:
+            n_active: int | None = None, faults=None) -> dict:
     """Run a single lockVM program; returns python-side stats.
 
     Thin single-cell wrapper kept for backward compatibility; sweeps should
     go through :func:`run_sweep` (one compile, one dispatch for all cells).
+    ``faults`` is an optional :class:`repro.sim.faults.FaultSchedule` (or a
+    4-tuple of ``(n_faults,)`` int32 arrays).
     """
     assert wa_size & (wa_size - 1) == 0
     prog_len = PROG_LEN
@@ -822,14 +917,17 @@ def run_sim(program: np.ndarray, *, n_threads: int, mem_words: int,
         init_mem = np.zeros(mem_words, np.int32)
     if n_active is None:
         n_active = n_threads
-    engine = _build_engine(n_threads, mem_words, n_locks, prog_len)
+    fault_args = _fault_arrays(faults)
+    engine = _build_engine(n_threads, mem_words, n_locks, prog_len,
+                           n_faults=fault_args[0].shape[0] if fault_args
+                           else 0)
     out = engine(jnp.asarray(program), jnp.asarray(init_pc),
                  jnp.asarray(init_regs), jnp.asarray(init_mem),
                  jnp.int32(n_active), jnp.uint32(seed),
                  jnp.int32(horizon), jnp.int32(max_events),
                  jnp.asarray(costs.to_array()),
                  jnp.int32(wa_base), jnp.int32(wa_size - 1),
-                 jnp.int32(wa_size))
+                 jnp.int32(wa_size), *(jnp.asarray(a) for a in fault_args))
     mem = np.asarray(out.pop("grant_value"))
     res = {k: np.asarray(v) for k, v in out.items()}
     res["mem"] = mem
@@ -853,7 +951,7 @@ def debug_states(program: np.ndarray, *, n_threads: int, mem_words: int,
                  max_events: int = 2_000_000, seed: int = 1,
                  costs: Costs | np.ndarray = DEFAULT_COSTS,
                  init_mem: np.ndarray | None = None,
-                 n_active: int | None = None):
+                 n_active: int | None = None, faults=None):
     """Single-cell debug entry: yield the full :class:`SimState` (as numpy)
     after EVERY event, in the engine's own event order.
 
@@ -879,7 +977,9 @@ def debug_states(program: np.ndarray, *, n_threads: int, mem_words: int,
                   costs=jnp.asarray(costs, jnp.int32),
                   wa_base=jnp.int32(wa_base), wa_mask=jnp.int32(wa_size - 1),
                   wa_size=jnp.int32(wa_size), horizon=jnp.int32(horizon),
-                  max_events=jnp.int32(max_events))
+                  max_events=jnp.int32(max_events),
+                  **{k: jnp.asarray(v)
+                     for k, v in _fault_fields(_fault_arrays(faults)).items()})
     s = _initial_state(n_threads, mem_words, n_locks,
                        jnp.asarray(init_pc), jnp.asarray(init_regs),
                        jnp.asarray(init_mem), jnp.int32(n_active),
@@ -962,7 +1062,7 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
               init_mem: np.ndarray | None = None,
               mode: str = "auto", lanes: int | None = None,
               chunk: int | None = None, interpret: bool | None = None,
-              live_mem_words=None) -> dict:
+              live_mem_words=None, faults=None) -> dict:
     """Run a batch of independent simulations as ONE compiled, vmapped call.
 
     Every per-cell argument carries a leading batch axis of size B; scalars
@@ -1000,6 +1100,11 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
       live_mem_words: optional (B,) per-cell *unpadded* memory sizes, used
         only for the ``pad_stats`` waste report (defaults to ``mem_words``,
         i.e. no padding assumed).
+      faults: optional per-cell fault schedules — a 4-tuple of
+        ``(B, n_faults)`` int32 arrays ``(kind, evt, tid, arg)`` as produced
+        by :func:`repro.sim.faults.stack_schedules`.  None (the default)
+        builds the fault-free step: zero-fault sweeps are bit-identical to
+        the pre-fault-subsystem engine.
 
     Returns a dict of stacked numpy arrays: per-thread stats have shape
     (B, n_threads), scalars (B,), and ``grant_value`` (B, mem_words) holds
@@ -1061,10 +1166,19 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
     init_mem = np.asarray(init_mem, np.int32)
     assert init_mem.shape == (n_cells, mem_words), init_mem.shape
 
+    if faults is not None:
+        fault_args = tuple(np.asarray(a, np.int32) for a in faults)
+        assert len(fault_args) == 4, len(fault_args)
+        n_faults = fault_args[0].shape[1]
+        for a in fault_args:
+            assert a.shape == (n_cells, n_faults), (a.shape, n_cells, n_faults)
+    else:
+        fault_args, n_faults = (), 0
+
     n_active_arr = _broadcast_cells(n_active, n_cells, np.int32)
     engine = _build_engine(n_threads, mem_words, n_locks, prog_len,
                            batched=mode, n_lanes=lanes, chunk=chunk,
-                           interpret=interpret)
+                           interpret=interpret, n_faults=n_faults)
     out = engine(jnp.asarray(programs), jnp.asarray(init_pc),
                  jnp.asarray(init_regs), jnp.asarray(init_mem),
                  jnp.asarray(n_active_arr),
@@ -1074,7 +1188,8 @@ def run_sweep(programs: np.ndarray, *, mem_words: int, n_locks: int,
                  jnp.asarray(costs),
                  jnp.asarray(_broadcast_cells(wa_base, n_cells, np.int32)),
                  jnp.asarray(wa_size_arr - 1),
-                 jnp.asarray(wa_size_arr))
+                 jnp.asarray(wa_size_arr),
+                 *(jnp.asarray(a) for a in fault_args))
     res = {k: np.asarray(v) for k, v in out.items()}
     res["mode"] = mode
     res["pad_stats"] = _pad_stats(

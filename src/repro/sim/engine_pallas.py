@@ -74,13 +74,18 @@ def cell_state_bytes(n_threads: int, mem_words: int) -> int:
 
 
 def make_run_pallas(n_threads: int, mem_words: int, n_locks: int,
-                    prog_len: int, chunk: int, interpret: bool):
+                    prog_len: int, chunk: int, interpret: bool,
+                    n_faults: int = 0):
     """Build the ``mode="pallas"`` sweep driver for one shape set.
 
     Same signature as the other ``_make_run_*`` drivers: the returned
     function takes the batched sweep arrays (leading axis B) and returns
     the stacked per-cell stats dict.  ``chunk`` and ``interpret`` are
-    compile-time constants (part of the ``_build_engine`` cache key).
+    compile-time constants (part of the ``_build_engine`` cache key), as is
+    ``n_faults`` — when > 0 the driver takes four trailing ``(B, n_faults)``
+    fault-schedule arrays and the kernel's step gains the fault phase (the
+    no-event identity still holds for overshoot steps: faults only apply
+    while the cell is live, so burst overshoot remains free).
     """
     assert chunk >= 1, chunk
     n_lines = mem_words // isa.WORDS_PER_SECTOR
@@ -89,17 +94,25 @@ def make_run_pallas(n_threads: int, mem_words: int, n_locks: int,
     def kernel(program_ref, init_pc_ref, init_regs_ref, init_mem_ref,
                n_active_ref, seed_ref, horizon_ref, max_events_ref,
                costs_ref, wa_base_ref, wa_mask_ref, wa_size_ref,
-               acq_ref, wacq_ref, hs_ref, hc_ref, ev_ref, slp_ref, mem_ref):
+               *rest):
         """One grid step = one sweep cell, start to finish.
 
         Refs hold this cell's (1, ...) blocks; indexing row 0 materializes
         the cell's state in kernel memory, where the whole event burst runs
-        before the final stats are stored back.
+        before the final stats are stored back.  ``rest`` is the four fault
+        refs (when ``n_faults > 0``) followed by the seven output refs.
         """
+        fault_refs, out_refs = rest[:-7], rest[-7:]
+        acq_ref, wacq_ref, hs_ref, hc_ref, ev_ref, slp_ref, mem_ref = out_refs
+        fault_fields = {}
+        if fault_refs:
+            fault_fields = dict(zip(
+                ("f_kind", "f_evt", "f_tid", "f_arg"),
+                (r[0] for r in fault_refs)))
         c = SimConsts(program=program_ref[0], costs=costs_ref[0],
                       wa_base=wa_base_ref[0], wa_mask=wa_mask_ref[0],
                       wa_size=wa_size_ref[0], horizon=horizon_ref[0],
-                      max_events=max_events_ref[0])
+                      max_events=max_events_ref[0], **fault_fields)
         s0 = _initial_state(n_threads, mem_words, n_locks,
                             init_pc_ref[0], init_regs_ref[0],
                             init_mem_ref[0], n_active_ref[0], seed_ref[0])
@@ -124,7 +137,9 @@ def make_run_pallas(n_threads: int, mem_words: int, n_locks: int,
         mem_ref[0] = s.mem
 
     def run(program, init_pc, init_regs, init_mem, n_active, seed,
-            horizon, max_events, costs, wa_base, wa_mask, wa_size):
+            horizon, max_events, costs, wa_base, wa_mask, wa_size, *faults):
+        assert len(faults) == (4 if n_faults else 0), \
+            (len(faults), n_faults)
         n_cells = program.shape[0]
         cell1 = lambda i: (i,)          # noqa: E731 - tiny index maps
         cell2 = lambda i: (i, 0)        # noqa: E731
@@ -143,7 +158,7 @@ def make_run_pallas(n_threads: int, mem_words: int, n_locks: int,
                 #                                            horizon, max_ev
                 pl.BlockSpec((1, 9), cell2),               # costs
                 scalar, scalar, scalar,                    # wa_base/mask/size
-            ],
+            ] + [pl.BlockSpec((1, n_faults), cell2)] * len(faults),
             out_specs=[
                 pl.BlockSpec((1, n_threads), cell2),       # acquisitions
                 pl.BlockSpec((1, n_threads), cell2),       # waited
@@ -162,7 +177,7 @@ def make_run_pallas(n_threads: int, mem_words: int, n_locks: int,
             ],
             interpret=interpret,
         )(program, init_pc, init_regs, init_mem, n_active, seed,
-          horizon, max_events, costs, wa_base, wa_mask, wa_size)
+          horizon, max_events, costs, wa_base, wa_mask, wa_size, *faults)
         return dict(zip(OUT_KEYS, out))
 
     return run

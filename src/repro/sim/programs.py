@@ -39,6 +39,7 @@ class Layout:
     reader_fraction: int = 50     # twa-rw: percent of acquisitions that are
     #                               reads (0 = writer-only, 100 = read-only)
     count_collisions: bool = False  # TWA family: tally wakeups in node words
+    timo_patience: int = 24       # twa-timo: poll iterations before abandoning
 
     @property
     def node_base(self) -> int:
@@ -658,6 +659,162 @@ def gen_twa_rw_release(asm: Asm, tag: str, layout: Layout) -> None:
     asm.label(f"{tag}_out")
 
 
+# --------------------------------------------------------------------------
+# twa-timo: TWA with timed (abortable) acquisition.  A waiter that exhausts
+# its patience budget abandons its ticket instead of waiting forever; the
+# releaser skips abandoned tickets when advancing the grant.
+# --------------------------------------------------------------------------
+
+# Per-lock abandonment counters, in the ticket sector next to the ticket
+# word (words 1 and 2 of the sector are otherwise unused by every lock).
+TIMO_ABANDONED_OFF = OFF_TICKET + 1   # waiter-side: tickets walked away from
+TIMO_SKIPPED_OFF = OFF_TICKET + 2     # releaser-side: markers consumed
+
+# Redraw gate, one word per (thread, lock) in the thread's node flag
+# sector at ``node_base + tid*MCS_NODE_STRIDE + lidx + TIMO_GATE_OFF``.
+# Words 0/1 hold MCS_FLAG / the collision counters (twa-timo uses
+# neither), so lock indices 0..13 fit inside the 16-word sector.
+TIMO_GATE_OFF = 2
+
+# The abandonment-arbitration ring: 32 slots recycled by ticket mod 32,
+# two slots per sector so the ring fits the OFF_PGRANTS region (16
+# sectors) the partitioned lock owns — a program is exactly one lock
+# algorithm, so twa-timo can reuse it.  Slot ``s`` of lock ``base`` lives
+# at ``base + OFF_PGRANTS + (s >> 1) * WORDS_PER_SECTOR + (s & 1)``.
+TIMO_RING = 32
+
+
+def _emit_timo_slot_addr(asm: Asm, ticket_reg: int, parity_reg: int) -> None:
+    """R_AT <- ring-slot address for the ticket in ``ticket_reg``.
+
+    Leaves ``s & 1`` in ``parity_reg`` (NOT R_V — ``_emit_add`` clobbers
+    R_V between the two adds).  Clobbers R_T1, R_T2, R_V.
+    """
+    asm.emit(ANDI, R_T1, ticket_reg, 0, TIMO_RING - 1)      # s = tk & 31
+    asm.emit(ANDI, parity_reg, R_T1, 0, 1)                  # s & 1
+    asm.emit(SUB, R_T2, R_T1, parity_reg)                   # s - (s & 1)
+    asm.emit(MULI, R_T2, R_T2, 0, WORDS_PER_SECTOR // 2)    # (s>>1)*16
+    _emit_add(asm, R_AT, R_LOCK, R_T2)
+    _emit_add(asm, R_AT, R_AT, parity_reg)
+
+
+def gen_twa_timo_acquire(asm: Asm, tag: str, layout: Layout) -> None:
+    """Timed/abortable TWA: bounded-spin acquire that may abandon its ticket.
+
+    Waiting is POLLING, not parking — a parked thread cannot count down a
+    patience budget.  Far waiters (``dx > threshold``) poll their hashed
+    waiting-array slot (cheap: the slot changes at most once per handover
+    epoch) and fall through to the near loop as the grant approaches; near
+    waiters poll the grant word directly.  Either loop, on exhausting
+    ``layout.timo_patience`` iterations, ABANDONS the ticket:
+
+      * abandonment races the releaser through a SWAP on the ticket's ring
+        slot (``TIMO_RING`` slots, ticket mod 32).  The abandoner swaps in
+        the marker ``~tk``; the releaser advancing toward ``tk`` swaps in
+        the offer ``tk``.  Whoever swaps second sees the other's value, so
+        exactly one of {releaser skips ``tk``, waiter accepts the grant}
+        happens — a timed-out-but-actually-granted waiter takes the lock
+        instead of leaking a grant.
+      * an abandoner may not redraw until the grant passes its dead ticket
+        (the per-(thread, lock) gate word, written with SWAP for immediate
+        self-visibility).  This bounds outstanding tickets by the thread
+        count (<= 32), so ring slots never alias two live tickets.
+
+    Requires ``n_threads <= TIMO_RING`` and tickets seeded away from the
+    int32 wrap (the ``~tk`` marker must stay distinct from real tickets,
+    which are non-negative until the wrap).
+    """
+    assert layout.n_threads <= TIMO_RING, "ring slots would alias"
+    assert layout.n_locks <= WORDS_PER_SECTOR - TIMO_GATE_OFF, \
+        "gate words overflow the node flag sector"
+    thr = layout.long_term_threshold
+    arr = R_LIDX if layout.private_arrays else R_LOCK
+    asm.label(f"{tag}_top")
+    # gate: SPIN until the grant passes any previously abandoned ticket
+    # (gate word holds dead-ticket+1; 0 before the first abandonment)
+    _emit_add(asm, R_AT, R_NODE, R_LIDX)
+    asm.emit(LOAD, R_U, R_AT, 0, TIMO_GATE_OFF)
+    asm.emit(SPIN_GE, R_U, R_LOCK, 0, OFF_GRANT)
+    asm.emit(FADD, R_TX, R_LOCK, 1, OFF_TICKET)
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BEQI, R_DX, 0, 0, f"{tag}_fast")
+    asm.emit(MOVI, R_W, 0, 0, layout.timo_patience)      # patience budget
+    asm.emit(BLEI, R_DX, 0, thr, f"{tag}_near")
+    asm.emit(_hash_op(layout), R_AT, R_TX, arr)
+    asm.emit(LOAD, R_U, R_AT, 0, 0)                      # slot snapshot
+    asm.label(f"{tag}_far")
+    asm.emit(ADDI, R_W, R_W, 0, -1)
+    asm.emit(BLEI, R_W, 0, 0, f"{tag}_aband")
+    asm.emit(LOAD, R_T1, R_AT, 0, 0)
+    asm.emit(BEQ, R_T1, R_U, 0, f"{tag}_far")            # slot unchanged
+    asm.emit(MOV, R_U, R_T1)                             # re-snapshot
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BLEI, R_DX, 0, 0, f"{tag}_claim")
+    asm.emit(BGTI, R_DX, 0, thr, f"{tag}_far")
+    asm.label(f"{tag}_near")                             # dx within threshold
+    asm.emit(LOAD, R_G, R_LOCK, 0, OFF_GRANT)
+    asm.emit(SUB, R_DX, R_TX, R_G)
+    asm.emit(BLEI, R_DX, 0, 0, f"{tag}_claim")
+    asm.emit(ADDI, R_W, R_W, 0, -1)
+    asm.emit(BGTI, R_W, 0, 0, f"{tag}_near")
+    asm.label(f"{tag}_aband")                            # patience exhausted
+    _emit_timo_slot_addr(asm, R_TX, R_K)
+    asm.emit(SUB, R_V, R_Z, R_TX)
+    asm.emit(ADDI, R_V, R_V, 0, -1)                      # marker ~tk
+    asm.emit(SWAP, R_T1, R_AT, R_V, OFF_PGRANTS)
+    asm.emit(BEQ, R_T1, R_TX, 0, f"{tag}_accept")        # releaser's offer
+    asm.emit(ADDI, R_U, R_TX, 0, 1)                      # gate := tk + 1
+    _emit_add(asm, R_AT, R_NODE, R_LIDX)
+    asm.emit(SWAP, R_T1, R_AT, R_U, TIMO_GATE_OFF)       # RMW: self-visible
+    asm.emit(FADD, R_U, R_LOCK, 1, TIMO_ABANDONED_OFF)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_top")                 # redraw (gated)
+    asm.label(f"{tag}_accept")                           # granted after all
+    asm.emit(SPIN_GE, R_TX, R_LOCK, 0, OFF_GRANT)
+    asm.label(f"{tag}_claim")
+    asm.emit(ACQ, R_LIDX, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_in")
+    asm.label(f"{tag}_fast")
+    asm.emit(ACQ, R_LIDX, 0, 0)
+    asm.label(f"{tag}_in")
+
+
+def gen_twa_timo_release(asm: Asm, tag: str, layout: Layout) -> None:
+    """Advance the grant past every contiguous abandoned ticket.
+
+    For each candidate ``g_next`` the releaser SWAPs the offer ``g_next``
+    into the candidate's ring slot: seeing the marker ``~g_next`` convicts
+    an abandonment (count it, skip to the next ticket); anything else
+    means the candidate is live (or not yet drawn) and gets the grant.
+    The skip loop terminates: outstanding markers are bounded by the
+    redraw gates, and the slot for an undrawn ticket can only hold stale
+    values from >= 32 tickets ago, never ``~g_next``.  Skipping past every
+    marker is also what reopens the abandoners' gates.
+    """
+    thr = layout.long_term_threshold
+    asm.emit(ADDI, R_K, R_TX, 0, 1)                      # g_next candidate
+    asm.label(f"{tag}_sk")
+    _emit_timo_slot_addr(asm, R_K, R_U)
+    asm.emit(SWAP, R_T1, R_AT, R_K, OFF_PGRANTS)         # offer g_next
+    asm.emit(SUB, R_V, R_Z, R_K)
+    asm.emit(ADDI, R_V, R_V, 0, -1)                      # ~g_next
+    asm.emit(BEQ, R_T1, R_V, 0, f"{tag}_skp")            # marker: abandoned
+    asm.emit(REL, 0, R_LIDX, 0, 0)
+    asm.emit(STORE, R_LOCK, R_K, 0, OFF_GRANT)           # handover store
+    asm.emit(ADDI, R_T1, R_K, 0, thr)                    # notify new short-term
+    asm.emit(_hash_op(layout), R_AT, R_T1,
+             R_LIDX if layout.private_arrays else R_LOCK)
+    asm.emit(FADD, R_Z, R_AT, 1, 0)
+    asm.emit(MOVI, R_Z, 0, 0, 0)                         # restore R_Z == 0
+    asm.emit(JMP, 0, 0, 0, f"{tag}_out")
+    asm.label(f"{tag}_skp")
+    asm.emit(FADD, R_U, R_LOCK, 1, TIMO_SKIPPED_OFF)
+    asm.emit(ADDI, R_K, R_K, 0, 1)
+    asm.emit(JMP, 0, 0, 0, f"{tag}_sk")
+    asm.label(f"{tag}_out")
+
+
 def anderson_init_mem(layout: Layout) -> np.ndarray:
     """Initial memory for Anderson: the slot of ticket 0 pre-granted (the
     classic ``flags[0] = 1``), per lock."""
@@ -693,6 +850,7 @@ ACQUIRE_GEN = {
         asm, tag, layout.long_term_threshold),
     "twa-id": gen_twa_id_acquire,
     "twa-staged": gen_twa_staged_acquire,
+    "twa-timo": gen_twa_timo_acquire,
     "partitioned": lambda asm, tag, layout: gen_partitioned_acquire(asm, tag),
 }
 
@@ -709,6 +867,7 @@ RELEASE_GEN = {
     "tkt-dual": lambda asm, tag, layout: gen_tkt_dual_release(asm, tag),
     "twa-id": gen_twa_id_release,
     "twa-staged": lambda asm, tag, layout: gen_ticket_release(asm, tag),
+    "twa-timo": gen_twa_timo_release,
     "partitioned": lambda asm, tag, layout: gen_partitioned_release(asm, tag),
 }
 

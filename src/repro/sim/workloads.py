@@ -19,6 +19,7 @@ import numpy as np
 from . import engine
 from .costs import DEFAULT_COSTS, Costs
 from .engine import run_sim
+from .faults import FaultSchedule, draw_schedule, stack_schedules
 from .programs import (INIT_MEM_GEN, LT_THRESHOLD, Layout, PROG_LEN,
                        build_invalidation_diameter, build_mutexbench,
                        init_state, pad_mem, pad_program, pad_threads)
@@ -48,6 +49,9 @@ class SweepCell:
     long_term_threshold: int
     sem_permits: int
     reader_fraction: int
+    preempt_faults: int
+    spurious_faults: int
+    abort_faults: int
 
 
 @dataclass(frozen=True)
@@ -62,6 +66,16 @@ class SweepSpec:
     permits→T approaches uncontended entry (only twa-sem consumes it).
     The ``reader_fraction`` axis (percent of acquisitions that are reads)
     maps the writer-only→read-only continuum; only twa-rw consumes it.
+
+    The three ``*_faults`` axes inject deterministic fault schedules
+    (:mod:`repro.sim.faults`): per cell, that many preemption windows /
+    spurious wakeups / thread aborts are drawn from an rng seeded off the
+    cell coordinates, so a given cell's schedule is reproducible across
+    sweep shapes.  ``preempt_cost`` (scalar knob) is the stall K charged
+    per preemption; ``fault_evt_span`` bounds the event indices faults
+    land on (pass the expected executed-event count so faults hit inside
+    the run).  When every fault axis is 0 the engine is invoked with
+    ``faults=None`` — the exact historical call, bit-identical results.
     """
 
     locks: tuple | str = ("ticket", "twa", "mcs")
@@ -74,19 +88,25 @@ class SweepSpec:
     long_term_threshold: tuple | int = LT_THRESHOLD  # TWA-family split point
     sem_permits: tuple | int = 4         # twa-sem capacity (axis)
     reader_fraction: tuple | int = 50    # twa-rw read percent (axis, Fig 10)
+    preempt_faults: tuple | int = 0      # preemption windows per run (axis)
+    spurious_faults: tuple | int = 0     # spurious wakeups per run (axis)
+    abort_faults: tuple | int = 0        # thread aborts per run (axis)
     ncs_max: int = 200
     cs_rand: tuple | None = None
     n_locks: int = 1
     horizon: int = DEFAULT_HORIZON
     max_events: int = DEFAULT_MAX_EVENTS
     count_collisions: bool = False       # TWA family: tally wakeups (Fig 8)
+    preempt_cost: int = 4096             # stall cycles K per preemption
+    fault_evt_span: int | None = None    # bound on fault event indices
 
     def cells(self) -> list[SweepCell]:
         return [SweepCell(lock=lk, n_threads=t, seed=s, cs_work=cw,
                           private_arrays=pa, costs=co, wa_size=ws,
                           long_term_threshold=lt, sem_permits=sp,
-                          reader_fraction=rf)
-                for lk, t, s, cw, pa, co, ws, lt, sp, rf
+                          reader_fraction=rf, preempt_faults=pf,
+                          spurious_faults=sf, abort_faults=af)
+                for lk, t, s, cw, pa, co, ws, lt, sp, rf, pf, sf, af
                 in itertools.product(
                     _as_tuple(self.locks), _as_tuple(self.threads),
                     _as_tuple(self.seeds), _as_tuple(self.cs_work),
@@ -94,7 +114,31 @@ class SweepSpec:
                     _as_tuple(self.wa_size),
                     _as_tuple(self.long_term_threshold),
                     _as_tuple(self.sem_permits),
-                    _as_tuple(self.reader_fraction))]
+                    _as_tuple(self.reader_fraction),
+                    _as_tuple(self.preempt_faults),
+                    _as_tuple(self.spurious_faults),
+                    _as_tuple(self.abort_faults))]
+
+    def fault_schedule_for(self, cell: SweepCell) -> FaultSchedule:
+        """The cell's deterministic fault schedule (empty when all axes 0).
+
+        Seeded off the cell coordinates — not the cell's position in the
+        sweep — so the same (seed, threads, fault counts) cell draws the
+        same schedule no matter which other axes the sweep carries.
+        """
+        total = cell.preempt_faults + cell.spurious_faults + cell.abort_faults
+        if total == 0:
+            return FaultSchedule.empty()
+        rng = np.random.default_rng(
+            [0xFA17, cell.seed, cell.n_threads, cell.preempt_faults,
+             cell.spurious_faults, cell.abort_faults])
+        span = (self.max_events if self.fault_evt_span is None
+                else self.fault_evt_span)
+        return draw_schedule(
+            rng, n_active=cell.n_threads, max_events=self.max_events,
+            n_preempt=cell.preempt_faults, n_spurious=cell.spurious_faults,
+            n_abort=cell.abort_faults,
+            k_range=(self.preempt_cost, self.preempt_cost), evt_span=span)
 
     def layout_for(self, cell: SweepCell) -> Layout:
         return Layout(n_threads=cell.n_threads, n_locks=self.n_locks,
@@ -137,6 +181,11 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
     t_max = max(layout.n_threads for layout, *_ in built)
     m_max = max(layout.mem_words for layout, *_ in built)
     padded = [pad_threads(pc, regs, t_max) for _, _, pc, regs, _ in built]
+    scheds = [spec.fault_schedule_for(cell) for cell in cells]
+    # faults=None when no cell schedules any fault: the engine call (and
+    # its compiled kernel) is then byte-identical to the pre-fault path.
+    faults = (stack_schedules(scheds) if any(len(s) for s in scheds)
+              else None)
     raw = engine.run_sweep(
         np.stack([pad_program(prog) for _, prog, *_ in built]),
         mem_words=m_max, n_locks=spec.n_locks,
@@ -154,6 +203,7 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
         mode=mode, lanes=lanes, chunk=chunk, interpret=interpret,
         live_mem_words=np.asarray([layout.mem_words
                                    for layout, *_ in built]),
+        faults=faults,
     )
 
     results = []
@@ -166,6 +216,10 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
             "long_term_threshold": cell.long_term_threshold,
             "sem_permits": cell.sem_permits,
             "reader_fraction": cell.reader_fraction,
+            "preempt_faults": cell.preempt_faults,
+            "spurious_faults": cell.spurious_faults,
+            "abort_faults": cell.abort_faults,
+            "fault_schedule": scheds[i],
             "layout": layout,  # the run's OWN layout (collision readers
             #                    must not reconstruct it by hand)
             "acquisitions": raw["acquisitions"][i, :t],
@@ -200,6 +254,9 @@ def sweep_curves(spec: SweepSpec, value: str = "throughput") -> dict:
     assert len(_as_tuple(spec.long_term_threshold)) == 1
     assert len(_as_tuple(spec.sem_permits)) == 1
     assert len(_as_tuple(spec.reader_fraction)) == 1
+    assert len(_as_tuple(spec.preempt_faults)) == 1
+    assert len(_as_tuple(spec.spurious_faults)) == 1
+    assert len(_as_tuple(spec.abort_faults)) == 1
     results = run_sweep(spec)
     by_cell = {(r["lock"], r["n_threads"], r["seed"]): r[value]
                for r in results}

@@ -141,7 +141,7 @@ def test_coverage_map_novelty_and_roundtrip(tmp_path):
 
 
 def test_case_signature_separates_locks():
-    scenarios = generate_batch(22, seed=3)  # covers every SIM_LOCKS entry
+    scenarios = generate_batch(24, seed=3)  # covers every SIM_LOCKS entry
     res = run_batch_oracle(scenarios, collect_coverage=True)
     cov = res.coverage
     sigs = {

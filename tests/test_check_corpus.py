@@ -11,6 +11,12 @@ Two families, distinguished by the expected-class pin each entry carries:
     reporting the recorded invariant classes — they pin the checker's own
     sensitivity (one historical shrunk case per invariant class:
     exclusion, conservation, deadlock, collision).
+  * ``fault_*``: composed scenarios carrying scheduled fault injections
+    (preemption windows, spurious wakeups, a thread abort, and a
+    timed-lock abandonment case under preemption) whose every fault lands
+    inside the run.  They must replay with ZERO problems across all four
+    sweep modes — they pin the fault semantics of the engine, both oracles
+    and the C fast path against each other.
 
 Regenerate with ``python -m repro.sim.check.make_corpus tests/corpus``
 after any intended engine/oracle semantics change.
@@ -34,6 +40,16 @@ def test_corpus_is_present_and_covers_all_invariant_classes():
     assert sum(n.startswith("diff_") for n in names) >= 3
     # near-wrap pins: tickets seeded at INT32_MAX-2 must replay clean
     assert sum(n.startswith("wrap_") for n in names) >= 2
+    # fault pins: scheduled preemptions/spurious wakes/aborts replay clean
+    assert sum(n.startswith("fault_") for n in names) >= 4
+    fault_kinds = set()
+    for p in CORPUS:
+        if os.path.basename(p).startswith("fault_"):
+            s = load_scenario(p)
+            rows = s.meta.get("faults") or []
+            assert rows, p  # a fault pin must actually schedule faults
+            fault_kinds |= {int(r[0]) for r in rows}
+    assert fault_kinds >= {1, 2, 3}  # preempt, spurious, abort all pinned
     covered = set()
     for p in CORPUS:
         covered |= set(load_scenario(p).meta.get("expect_classes", []))

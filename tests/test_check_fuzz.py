@@ -17,7 +17,7 @@ from repro.sim.isa import ADDI, HASH, MOVI, N_OPS, OPCODES, R_AT, R_LIDX, \
 from repro.sim.programs import PROG_LEN
 
 BATCH_SEED = 123
-N_CASES = 22  # 13 composed (ALL of SIM_LOCKS, round-robin) + 9 random
+N_CASES = 24  # 14 composed (ALL of SIM_LOCKS, round-robin) + 10 random
 
 
 @pytest.fixture(scope="module")

@@ -42,7 +42,7 @@ def _assert_match(prog, kw, trace=None):
 
 
 def test_oracle_matches_engine_every_lock():
-    """All 13 SIM_LOCKS mutexbench programs: every stat and the final
+    """All 14 SIM_LOCKS mutexbench programs: every stat and the final
     memory must be bit-identical between oracle and engine."""
     for lock in SIM_LOCKS:
         prog, kw = _cell(lock)

@@ -18,11 +18,13 @@ from repro.sim import (Layout, SIM_LOCKS, SweepSpec, build_occupancy_probe,
                        run_contention, run_sweep)
 from repro.sim.engine import run_sim
 from repro.sim.isa import OFF_GRANT, OFF_RD, OFF_TAIL, OFF_TICKET
-from repro.sim.programs import INIT_MEM_GEN, OCC_OFF, OVLP_OFF, VIOL_OFF
+from repro.sim.programs import (INIT_MEM_GEN, OCC_OFF, OVLP_OFF,
+                                TIMO_ABANDONED_OFF, TIMO_SKIPPED_OFF, VIOL_OFF)
 
 H = 120_000
 NEW_LOCKS = ("clh", "hemlock", "twa-sem")
 PR5_LOCKS = ("fissile-twa", "twa-rw")
+TIMO_LOCKS = ("twa-timo",)
 
 
 def _run_sim_cell(lock, n_threads, *, seed, horizon=H, **layout_kw):
@@ -41,7 +43,8 @@ def _run_sim_cell(lock, n_threads, *, seed, horizon=H, **layout_kw):
 def test_new_locks_registered():
     assert set(NEW_LOCKS) <= set(SIM_LOCKS)
     assert set(PR5_LOCKS) <= set(SIM_LOCKS)
-    assert len(SIM_LOCKS) == 13
+    assert set(TIMO_LOCKS) <= set(SIM_LOCKS)
+    assert len(SIM_LOCKS) == 14
 
 
 def test_new_locks_sweep_matches_sequential_run_sim():
@@ -77,7 +80,7 @@ def test_new_locks_progress_and_fifo_fairness():
 
 
 @pytest.mark.parametrize("lock", ["clh", "hemlock", "twa-sem", "ticket",
-                                  "twa", "mcs"])
+                                  "twa", "mcs", "twa-timo"])
 def test_occupancy_cap_never_violated(lock):
     """The probe program flags any instant where critical-section occupancy
     exceeds the cap (1 for mutexes, sem_permits for twa-sem) — the flag must
@@ -238,6 +241,51 @@ def test_fissile_occupancy_cap_never_violated():
     assert 0 <= res["mem"][OCC_OFF] <= 1
     assert res["mem"][OFF_TAIL] >= 0               # TAS word, not a queue
     assert res["acquisitions"].sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# PR-8: the timed/abortable TWA (twa-timo)
+# ---------------------------------------------------------------------------
+
+def test_twa_timo_sweep_matches_sequential_run_sim():
+    """twa-timo must be a full sweep citizen: the padded, batched sweep
+    equals the unpadded single-cell engine bit for bit."""
+    spec = SweepSpec(locks=TIMO_LOCKS, threads=(3, 8), seeds=(1, 2),
+                     horizon=60_000)
+    for r in run_sweep(spec):
+        ref = _run_sim_cell(r["lock"], r["n_threads"], seed=r["seed"],
+                            horizon=60_000)
+        assert np.array_equal(r["acquisitions"], ref["acquisitions"]), \
+            (r["lock"], r["n_threads"], r["seed"])
+        assert r["events"] == ref["events"]
+        assert np.array_equal(r["mem"], ref["mem"])
+
+
+def test_twa_timo_modes_bitwise_equal():
+    spec = SweepSpec(locks=TIMO_LOCKS, threads=(2, 6), seeds=1,
+                     horizon=60_000)
+    for a, b in zip(run_sweep(spec, mode="map"),
+                    run_sweep(spec, mode="vmap")):
+        assert np.array_equal(a["acquisitions"], b["acquisitions"])
+        assert a["events"] == b["events"]
+        assert np.array_equal(a["mem"], b["mem"])
+
+
+def test_twa_timo_patience_knob_reaches_the_program():
+    """The Layout.timo_patience budget must reach the generated acquire
+    path: an impatient waiter (patience 1) abandons tickets under
+    contention while a very patient one (patience 2000) never does — and
+    the release-side skip counter always books one skip per abandonment."""
+    abandoned = {}
+    for patience in (1, 2000):
+        r = _run_sim_cell("twa-timo", 12, seed=7, timo_patience=patience)
+        ab = int(r["mem"][TIMO_ABANDONED_OFF])
+        sk = int(r["mem"][TIMO_SKIPPED_OFF])
+        assert 0 <= ab - sk <= 12, (patience, ab, sk)  # markers in flight
+        assert r["acquisitions"].sum() > 0, patience
+        abandoned[patience] = ab
+    assert abandoned[2000] == 0, abandoned
+    assert abandoned[1] > 10, abandoned
 
 
 def test_long_term_threshold_axis_reaches_the_program():
