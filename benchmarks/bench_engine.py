@@ -12,7 +12,10 @@ work-stealing ``sched`` driver, and the fused-kernel ``pallas`` driver pay
 Rows: ``bench_engine/<mode>/wall_ms`` (median of ``repeats`` timed runs,
 compile excluded via a warmup call), ``bench_engine/sum_events`` /
 ``max_events`` (the sweep's skew), padding-waste fractions from the sweep's
-``pad_stats`` report, ``bench_engine/speedup/<a>_over_<b>`` ratios, and the
+``pad_stats`` report, the sweep-wide acquire-latency percentiles
+(``bench_engine/lat_p50``/``lat_p99``/``lat_p999`` — the cells run with
+``collect_latency=True`` and ``lat_hist`` joins the four-driver
+bit-identity assert), ``bench_engine/speedup/<a>_over_<b>`` ratios, and the
 driver-geometry frontier — one ``bench_engine/frontier/...`` row per sched
 ``lanes×chunk`` and pallas ``chunk`` point.  The same numbers land in
 ``BENCH_engine.json`` (every mode row and frontier row carries the
@@ -39,7 +42,7 @@ import numpy as np
 import jax
 
 from repro.sim import engine
-from repro.sim.workloads import pack_engine_cells
+from repro.sim.workloads import hist_percentile, pack_engine_cells
 
 from .common import emit
 
@@ -84,7 +87,7 @@ def run(smoke: bool = False, repeats: int = 3,
         json_path: str | None = None) -> dict:
     backend = jax.default_backend()
     cells = SMOKE_CELLS if smoke else SKEWED_CELLS
-    programs, kw = pack_engine_cells(cells, seeds=1)
+    programs, kw = pack_engine_cells(cells, seeds=1, collect_latency=True)
 
     walls: dict[str, float] = {}
     reference = None
@@ -96,7 +99,7 @@ def run(smoke: bool = False, repeats: int = 3,
         if reference is None:
             reference = out
         else:  # the four drivers must agree bit for bit
-            for key in ("acquisitions", "events", "grant_value"):
+            for key in ("acquisitions", "events", "grant_value", "lat_hist"):
                 assert np.array_equal(reference[key], out[key]), (mode, key)
 
     events = reference["events"]
@@ -108,6 +111,15 @@ def run(smoke: bool = False, repeats: int = 3,
     for k in ("live_thread_frac", "live_prog_frac", "live_mem_frac"):
         emit(f"bench_engine/pad/{k}", f"{pad_stats[k]:.3f}",
              "padded_batch_fraction_doing_real_work")
+
+    # Sweep-wide acquire-latency tail (log2 histograms summed over cells);
+    # the trajectory JSON carries the columns so latency regressions show
+    # up next to the wall-clock ones.
+    lat_hist = np.asarray(reference["lat_hist"]).sum(axis=0)
+    latency = {f"lat_p{tag}": hist_percentile(lat_hist, q)
+               for tag, q in (("50", 0.5), ("99", 0.99), ("999", 0.999))}
+    for k, v in latency.items():
+        emit(f"bench_engine/{k}", f"{v:.0f}", "cycles_acquire_to_grant")
 
     speedups = {}
     for a, b in (("sched", "vmap"), ("map", "vmap"), ("map", "sched"),
@@ -146,6 +158,7 @@ def run(smoke: bool = False, repeats: int = 3,
                       for k, v in pad_stats.items()},
         "wall_ms": {m: round(w * 1e3, 1) for m, w in walls.items()},
         "speedup": {k: round(v, 3) for k, v in speedups.items()},
+        "latency": {k: round(v, 1) for k, v in latency.items()},
         "sched_params": dict(MODES[2][1]),
         "pallas_params": dict(MODES[3][1]),
         "frontier": frontier,

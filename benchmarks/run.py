@@ -2,16 +2,21 @@
 benchmarks.  Prints ``name,value,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,table1] [--smoke]
+                                            [--results store.jsonl]
 
 ``--smoke`` asks each suite that supports it (fig8, fig9, fig10,
 fig12deg, fuzz) for a reduced grid — CI runs these per-PR and uploads the
-CSV as a workflow artifact.
+CSV as a workflow artifact.  ``--results PATH`` persists every figure's
+sweep cells into the JSONL results store at PATH (the
+``REPRO_RESULTS_STORE`` hook in ``repro.sim.workloads.run_sweep``), which
+``python -m repro.sim.results`` then queries.
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import os
 import time
 
 from .common import emit, header
@@ -42,8 +47,13 @@ def main() -> None:
                     help="comma-separated suite prefixes to run")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced grids for suites that support it")
+    ap.add_argument("--results", default="",
+                    help="persist every sweep into this JSONL results store")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
+    if args.results:
+        from repro.sim.workloads import RESULTS_STORE_ENV
+        os.environ[RESULTS_STORE_ENV] = args.results
 
     header()
     t_start = time.time()

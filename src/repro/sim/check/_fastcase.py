@@ -50,6 +50,7 @@ from pathlib import Path
 from .. import isa
 from ..costs import (I_ATOMIC, I_HIT, I_INV, I_LOCAL, I_MISS, I_ST_OWNED,
                      I_ST_SHARED, I_WAKE, I_XFER)
+from ..engine import N_LAT_BUCKETS
 from ..faults import F_ABORT, F_PREEMPT, F_SPURIOUS
 from .oracle import INF as _INF
 
@@ -105,7 +106,9 @@ _C_TEMPLATE = r"""
 #define OP_ACQ      %(ACQ)d
 #define OP_REL      %(REL)d
 #define OP_HALT     %(HALT)d
+#define OP_TSTART   %(TSTART)d
 #define N_OPS       %(N_OPS)d
+#define N_LAT_BUCKETS %(N_LAT_BUCKETS)d
 #define N_BRANCH_KINDS %(N_BRANCH_KINDS)d
 #define N_SPIN_KINDS   %(N_SPIN_KINDS)d
 
@@ -176,6 +179,7 @@ int run_case(
     int32_t *out_acq, int32_t *out_waited,         /* (T,) each */
     int32_t *out_scalars,  /* [hand_sum, hand_cnt, events, sleeping, exit] */
     int32_t *out_mem,                              /* (M,) */
+    int32_t *out_lathist,                          /* (N_LAT_BUCKETS,) */
     int32_t *out_spin, int32_t *out_pc,            /* (T,) each */
     int32_t *out_regs,                             /* (T, N_REGS) */
     int32_t *acq_trace, int64_t acq_cap,           /* (acq_cap, 6) or NULL */
@@ -205,9 +209,10 @@ int run_case(
     int32_t *dirtyv = (int32_t *)malloc((size_t)n_lines * 4);
     uint64_t *sharers = (uint64_t *)calloc((size_t)n_lines, 8);
     int32_t *relt = (int32_t *)malloc((size_t)L * 4);
+    int32_t *acq_t0 = (int32_t *)malloc((size_t)T * 4);
     if (!mem || !regs || !pcv || !next_time || !pend_addr || !pend_val ||
         !pend_time || !spin || !wake_delay || !prngv || !dirtyv ||
-        !sharers || !relt) {
+        !sharers || !relt || !acq_t0) {
         ret = 2;
         goto done;
     }
@@ -221,9 +226,11 @@ int run_case(
         pend_time[t] = 0;
         spin[t] = -1;
         prngv[t] = (uint32_t)(uint64_t)(seed + (int64_t)t * 2654435761LL);
+        acq_t0[t] = -1;
         out_acq[t] = 0;
         out_waited[t] = 0;
     }
+    for (int i = 0; i < N_LAT_BUCKETS; i++) out_lathist[i] = 0;
     for (int i = 0; i < n_lines; i++) dirtyv[i] = -1;
     for (int i = 0; i < L; i++) relt[i] = -1;
     int npend = 0;  /* count of commit-visible (>= 0) pending stores */
@@ -489,6 +496,16 @@ int run_case(
                 hand_cnt++;
                 relt[li] = -1;
             }
+            /* consume a pending TSTART mark into the log2 latency
+             * histogram (same bucket formula as the engine/oracle) */
+            if (acq_t0[t] >= 0) {
+                int32_t blat = w32((int64_t)now - acq_t0[t]);
+                if (blat < 0) blat = 0;
+                int bkt = 0;
+                while (bkt < N_LAT_BUCKETS - 1 && blat >= (1 << bkt)) bkt++;
+                out_lathist[bkt]++;
+                acq_t0[t] = -1;
+            }
             if (acq_trace) {
                 if (nacq >= acq_cap) { ret = 3; goto done; }
                 int32_t *r = acq_trace + (size_t)nacq * 6;
@@ -508,6 +525,9 @@ int run_case(
         case OP_HALT:
             cost = INF;
             new_pc = pc0;
+            break;
+        case OP_TSTART:
+            acq_t0[t] = now;
             break;
         default:
             ret = 1;  /* unknown opcode: the sequential oracle raises */
@@ -535,7 +555,7 @@ done:
     if (trace_counts) { trace_counts[0] = nacq; trace_counts[1] = nfadd; }
     free(mem); free(regs); free(pcv); free(next_time); free(pend_addr);
     free(pend_val); free(pend_time); free(spin); free(wake_delay);
-    free(prngv); free(dirtyv); free(sharers); free(relt);
+    free(prngv); free(dirtyv); free(sharers); free(relt); free(acq_t0);
     return ret;
 }
 
@@ -556,7 +576,7 @@ int run_cases(
     const int32_t *f_tid, const int32_t *f_arg,       /* each, or NULL */
     int32_t n_faults,
     int32_t *out_acq, int32_t *out_waited,
-    int32_t *out_scalars, int32_t *out_mem,
+    int32_t *out_scalars, int32_t *out_mem, int32_t *out_lathist,
     int32_t *out_spin, int32_t *out_pc, int32_t *out_regs,
     int32_t *ret_codes,
     int32_t *acq_trace, int64_t acq_cap,
@@ -582,6 +602,7 @@ int run_cases(
             f_kind ? n_faults : 0,
             out_acq + (size_t)i * T, out_waited + (size_t)i * T,
             out_scalars + (size_t)i * 5, out_mem + (size_t)i * M,
+            out_lathist + (size_t)i * N_LAT_BUCKETS,
             out_spin + (size_t)i * T, out_pc + (size_t)i * T,
             out_regs + (size_t)i * T * N_REGS,
             acq_trace ? acq_trace + acq_off * 6 : 0,
@@ -621,12 +642,13 @@ def _c_source() -> str:
         "FADD", "SWAP", "CASZ", "ADDI", "MOVI", "MOV", "SUB", "MULI",
         "ANDI", "HASH", "HASHP", "BEQ", "JMP", "WORKI", "WORKR", "PRNG",
         "SPIN_EQ", "SPIN_NE", "SPIN_EQI", "SPIN_NEI", "SPIN_GE", "ACQ",
-        "REL", "HALT", "N_OPS")}
+        "REL", "HALT", "TSTART", "N_OPS")}
     subs.update(INF=int(_INF), I_LOCAL=I_LOCAL, I_HIT=I_HIT, I_MISS=I_MISS,
                 I_XFER=I_XFER, I_ST_OWNED=I_ST_OWNED,
                 I_ST_SHARED=I_ST_SHARED, I_INV=I_INV, I_ATOMIC=I_ATOMIC,
                 I_WAKE=I_WAKE, N_COSTS=I_WAKE + 1,
                 N_BRANCH_KINDS=isa.JMP - isa.BEQ + 1, N_SPIN_KINDS=5,
+                N_LAT_BUCKETS=N_LAT_BUCKETS,
                 F_PREEMPT=F_PREEMPT, F_SPURIOUS=F_SPURIOUS, F_ABORT=F_ABORT)
     return _C_TEMPLATE % subs
 
@@ -642,9 +664,9 @@ _CASES_ARGTYPES = (
      I32P, I32P, I32P, I32P,                      # wa_base/size, hz, max_ev
      I32P, ctypes.c_int32]                        # costs, mutate flags
     + [I32P] * 4 + [ctypes.c_int32]               # fault arrays + n_faults
-    + [I32P] * 8                                  # acq, waited, scalars,
-                                                  #   mem, spin, pc, regs,
-                                                  #   ret_codes
+    + [I32P] * 9                                  # acq, waited, scalars,
+                                                  #   mem, lathist, spin,
+                                                  #   pc, regs, ret_codes
     + [I32P, ctypes.c_int64, I32P, ctypes.c_int64]  # trace bufs + caps
     + [I64P, I32P]                                # trace offsets + counts
     + [I32P] * 4                                  # coverage

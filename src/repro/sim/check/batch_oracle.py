@@ -47,6 +47,7 @@ import numpy as np
 from .. import isa
 from ..costs import (I_ATOMIC, I_HIT, I_INV, I_LOCAL, I_MISS, I_ST_OWNED,
                      I_ST_SHARED, I_WAKE, I_XFER)
+from ..engine import N_LAT_BUCKETS
 from ..faults import F_ABORT, F_PREEMPT, F_SPURIOUS
 from .generate import scenario_faults
 from .oracle import INF, ORACLE_MUTATIONS, Trace, run_oracle
@@ -182,6 +183,8 @@ def run_batch_oracle(scenarios, mutate: tuple = (),
     hand_sum = np.zeros(B, np.int64)
     hand_cnt = np.zeros(B, np.int64)
     events = np.zeros(B, np.int64)
+    acq_t0 = np.full((B, T), -1, np.int64)
+    lat_hist = np.zeros((B, N_LAT_BUCKETS), np.int64)
     active = np.ones(B, bool)
     fallback = np.zeros(B, bool)
     exit_code = np.zeros(B, np.int64)
@@ -552,9 +555,29 @@ def run_batch_oracle(scenarios, mutate: tuple = (),
                                          + tnow0[s][got] - rt[got])
                     hand_cnt[cg2] += 1
                     rel_time[cg2, lidx[got]] = -1
+                # consume pending TSTART marks into the log2 latency
+                # histogram (same bucket formula as the engine/oracle);
+                # each case executes at most one thread op per lockstep
+                # iteration, so plain fancy-index increments are exact
+                t0 = acq_t0[cases, th]
+                marked = t0 >= 0
+                if marked.any():
+                    cm_ = cases[marked]
+                    blat = np.maximum(_w32(tnow0[s][marked] - t0[marked]), 0)
+                    bucket = (blat[:, None]
+                              >= (np.int64(1)
+                                  << np.arange(N_LAT_BUCKETS - 1,
+                                               dtype=np.int64))).sum(1)
+                    lat_hist[cm_, bucket] += 1
+                    acq_t0[cm_, th[marked]] = -1
                 if collect_trace:
                     acq_buf.append((cases, events[cases], tnow0[s], th,
                                     lidx, waited, regs[cases, th, isa.R_TX]))
+
+        # TSTART — mark acquisition start for the latency histogram
+        s = np.flatnonzero(op == isa.TSTART)
+        if s.size:
+            acq_t0[tg0[s], th0[s]] = tnow0[s]
 
         # REL
         s = np.flatnonzero(op == isa.REL)
@@ -603,6 +626,7 @@ def run_batch_oracle(scenarios, mutate: tuple = (),
     acq32 = acq.astype(np.int32)
     wacq32 = waited_acq.astype(np.int32)
     mem32 = mem.astype(np.int32)
+    lat32 = lat_hist.astype(np.int32)
     sleeping = (spin_addr >= 0).sum(1)
     for i in ok_cases:
         stats[i] = {
@@ -613,6 +637,7 @@ def run_batch_oracle(scenarios, mutate: tuple = (),
             "events": np.int32(events[i]),
             "sleeping": np.int32(sleeping[i]),
             "grant_value": mem32[i],
+            "lat_hist": lat32[i],
         }
     if collect_trace:
         fb_set = set(fb.tolist())
@@ -696,6 +721,7 @@ def _run_batch_c(scenarios, mutate, collect_trace,
     out_waited = np.zeros((B, T), i32)
     out_scalars = np.zeros((B, 5), i32)
     out_mem = np.zeros((B, M), i32)
+    out_lathist = np.zeros((B, N_LAT_BUCKETS), i32)
     out_spin = np.zeros((B, T), i32)
     out_pc = np.zeros((B, T), i32)
     out_regs = np.zeros((B, T, isa.N_REGS), i32)
@@ -732,7 +758,7 @@ def _run_batch_c(scenarios, mutate, collect_trace,
         p32(costs), mut,
         p32(fk), p32(fe), p32(ft), p32(fa), n_faults,
         p32(out_acq), p32(out_waited), p32(out_scalars), p32(out_mem),
-        p32(out_spin), p32(out_pc), p32(out_regs),
+        p32(out_lathist), p32(out_spin), p32(out_pc), p32(out_regs),
         p32(rets),
         p32(acq_trace), acq_cap, p32(fadd_trace), fadd_cap,
         toff.ctypes.data_as(_fastcase.I64P), p32(tcnt),
@@ -775,6 +801,7 @@ def _run_batch_c(scenarios, mutate, collect_trace,
             "events": ev_a[i],
             "sleeping": sl[i],
             "grant_value": out_mem[i],
+            "lat_hist": out_lathist[i],
         }
         if collect_trace:
             tr = new_trace(Trace)

@@ -28,7 +28,7 @@ import numpy as np
 from .. import isa
 from ..costs import (DEFAULT_COSTS, I_ATOMIC, I_HIT, I_INV, I_LOCAL, I_MISS,
                      I_ST_OWNED, I_ST_SHARED, I_WAKE, I_XFER, Costs)
-from ..engine import EVENT_ORDER_CONTRACT, INF as _INF
+from ..engine import EVENT_ORDER_CONTRACT, INF as _INF, N_LAT_BUCKETS
 from ..faults import F_ABORT, F_PREEMPT, F_SPURIOUS, FaultSchedule
 
 INF = int(_INF)
@@ -108,7 +108,8 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
 
     The returned dict carries exactly the fields ``engine.run_sweep`` emits
     per cell (``acquisitions``, ``waited_acquisitions``, ``handover_sum``,
-    ``handover_count``, ``events``, ``sleeping``, ``grant_value``) so the
+    ``handover_count``, ``events``, ``sleeping``, ``grant_value``,
+    ``lat_hist``) so the
     differential runner can compare them verbatim.  ``faults`` is an
     optional :class:`repro.sim.faults.FaultSchedule` (or its ``to_lists``
     row form) applied under the extended fault clause of
@@ -163,6 +164,8 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
     hand_sum = 0
     hand_cnt = 0
     events = 0
+    acq_t0 = [-1] * T
+    lat_hist = [0] * N_LAT_BUCKETS
 
     def load_cost(t, ln):
         mine = t in sharers[ln]
@@ -376,9 +379,19 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
                 hand_sum = _w32(hand_sum + now - rt)
                 hand_cnt += 1
                 rel_time[lidx] = -1
+            # consume a pending TSTART mark into the log2 latency histogram
+            # (same bucket formula as engine.h_acq, bit for bit)
+            if acq_t0[t] >= 0:
+                blat = max(_w32(now - acq_t0[t]), 0)
+                bucket = sum(blat >= (1 << k)
+                             for k in range(N_LAT_BUCKETS - 1))
+                lat_hist[bucket] += 1
+                acq_t0[t] = -1
             if trace is not None:
                 trace.acquires.append(
                     (events, now, t, lidx, waited, R[isa.R_TX]))
+        elif op == isa.TSTART:
+            acq_t0[t] = now
         elif op == isa.REL:
             rel_time[rb] = now
         elif op == isa.HALT:
@@ -398,6 +411,7 @@ def run_oracle(program: np.ndarray, *, n_threads: int, mem_words: int,
         "events": np.int32(events),
         "sleeping": np.int32(sum(1 for s in spin_addr if s >= 0)),
         "grant_value": np.asarray(mem, np.int32),
+        "lat_hist": np.asarray(lat_hist, np.int32),
     }
 
 

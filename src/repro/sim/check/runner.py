@@ -27,7 +27,8 @@ MODES = ("map", "vmap", "sched", "pallas")
 
 # Stats compared bit-identically between oracle and every engine mode.
 STAT_KEYS = ("acquisitions", "waited_acquisitions", "handover_sum",
-             "handover_count", "events", "sleeping", "grant_value")
+             "handover_count", "events", "sleeping", "grant_value",
+             "lat_hist")
 
 # Scheduler-geometry pool for fuzz batches.  The differential must exercise
 # the lane scheduler itself, not just the default 4×512 point: chunk=1
@@ -435,10 +436,15 @@ def shrink(scenario: Scenario, failing=None, modes: tuple = ("map",),
       1. horizon/max_events halving (cheapest first — shortens every later
          oracle run);
       2. dropping threads from the top (``n_active`` reduction);
-      3. replacing program rows with HALT (kills whole suffix behaviour),
+      3. fault-schedule minimization: drop ``meta["faults"]`` rows
+         one at a time (last first), then halve surviving preemption
+         stall widths — a fault-injected failure shrinks toward the one
+         fault that matters, or proves fault-independent by losing them
+         all;
+      4. replacing program rows with HALT (kills whole suffix behaviour),
          then with NOP (keeps control flow), to a fixed point.
 
-    ``program_passes=False`` keeps the program untouched (passes 1-2 only)
+    ``program_passes=False`` keeps the program untouched (passes 1-3 only)
     — used for corpus entries whose *program semantics* are the point (a
     broken lock must stay a recognizable broken lock, not collapse into a
     two-instruction store to the violation word).
@@ -469,9 +475,19 @@ def shrink(scenario: Scenario, failing=None, modes: tuple = ("map",),
             return True
         return False
 
+    def fault_rows():
+        return [list(r) for r in (scenario.meta.get("faults") or [])]
+
+    def with_faults(rows):
+        meta = {k: v for k, v in scenario.meta.items() if k != "faults"}
+        if rows:
+            meta["faults"] = rows
+        return scenario.replace(meta=meta)
+
     def size():
+        rows = fault_rows()
         return (count_instructions(scenario.program), scenario.n_active,
-                scenario.horizon)
+                len(rows), sum(r[3] for r in rows), scenario.horizon)
 
     while True:
         before = size()
@@ -484,11 +500,27 @@ def shrink(scenario: Scenario, failing=None, modes: tuple = ("map",),
         while scenario.n_active > 1:  # 2. threads
             if not attempt(scenario.replace(n_active=scenario.n_active - 1)):
                 break
+        # 3. fault schedule: drop rows last-first (dropping keeps the
+        # earlier rows' event indices meaningful), then halve the stall
+        # width of surviving preemptions toward the minimal repro
+        for i in reversed(range(len(fault_rows()))):
+            rows = fault_rows()
+            if i < len(rows):
+                attempt(with_faults(rows[:i] + rows[i + 1:]))
+        from ..faults import F_PREEMPT
+        for i in range(len(fault_rows())):
+            while True:
+                rows = fault_rows()
+                if not (rows[i][0] == F_PREEMPT and rows[i][3] > 1):
+                    break
+                rows[i][3] //= 2
+                if not attempt(with_faults(rows)):
+                    break
         if not program_passes:
             if not improved and size() == before:
                 return scenario
             continue
-        for fill_op in (HALT, NOP):  # 3. program rows (tail-first for HALT)
+        for fill_op in (HALT, NOP):  # 4. program rows (tail-first for HALT)
             changed = True
             while changed:
                 changed = False
@@ -501,7 +533,7 @@ def shrink(scenario: Scenario, failing=None, modes: tuple = ("map",),
                     if attempt(scenario.replace(program=cand_prog)):
                         changed = True
                         prog = np.asarray(scenario.program)
-        # 4. branch short-circuit: a conditional branch becomes JMP (always
+        # 5. branch short-circuit: a conditional branch becomes JMP (always
         # taken) so its dead fall-through path can die in the next pass
         from ..isa import BEQ, BGTI, JMP
         prog = np.asarray(scenario.program)
@@ -510,7 +542,7 @@ def shrink(scenario: Scenario, failing=None, modes: tuple = ("map",),
                 cand_prog = np.asarray(scenario.program).copy()
                 cand_prog[i] = (JMP, 0, 0, 0, cand_prog[i, 4])
                 attempt(scenario.replace(program=cand_prog))
-        # 5. pair elimination: escape local minima where two rows (e.g. a
+        # 6. pair elimination: escape local minima where two rows (e.g. a
         # branch and its target) are only jointly removable
         live = [i for i in range(len(np.asarray(scenario.program)))
                 if int(np.asarray(scenario.program)[i, 0]) not in (NOP, HALT)]

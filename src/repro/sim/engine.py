@@ -82,6 +82,13 @@ from .programs import PROG_LEN, pad_program
 
 INF = np.int32(1 << 29)
 
+# Acquire-latency histogram geometry: bucket k counts samples with
+# ``lat >= 2^(k-1)`` and ``lat < 2^k`` (bucket 0 = zero-latency, bucket 31 =
+# everything from 2^30 up).  The bucket index is the number of powers of two
+# at or below the sample — ``sum(lat >= 2^k for k in 0..30)`` — computed with
+# the same formula in the engine, the NumPy oracles and the C kernel.
+N_LAT_BUCKETS = 32
+
 log = logging.getLogger(__name__)
 
 # The deterministic event-order contract, shared verbatim with the pure-NumPy
@@ -155,6 +162,8 @@ class SimState(NamedTuple):
     hand_sum: jax.Array    # () summed handover latency
     hand_cnt: jax.Array    # () handovers measured
     events: jax.Array      # () total events executed
+    acq_t0: jax.Array      # (T,) TSTART mark (acquire began at), -1 = unset
+    lat_hist: jax.Array    # (N_LAT_BUCKETS,) log2 acquire-latency histogram
 
 
 class Effects(NamedTuple):
@@ -190,6 +199,8 @@ class Effects(NamedTuple):
     hand_inc: jax.Array    # bool
     rel_idx: jax.Array     # rel_time slot to write, -1 = none
     rel_val: jax.Array
+    t0_new: jax.Array      # actor's acq_t0 after the event, -2 = keep
+    lat_idx: jax.Array     # latency-histogram bucket to bump, -1 = none
 
 
 def _event_times(s: SimState):
@@ -206,7 +217,8 @@ def _step(c: SimConsts, s: SimState) -> SimState:
 
     (next_time, pc, regs, prng, mem, sharers, dirty,
      pend_addr, pend_val, pend_time, spin_addr, wake_delay,
-     acq, waited_acq, rel_time, hand_sum, hand_cnt, events) = s
+     acq, waited_acq, rel_time, hand_sum, hand_cnt, events,
+     acq_t0, lat_hist) = s
 
     # ---- fault phase (statically absent when no schedule is attached) ----
     # Entries matching the current event counter mutate the thread timelines
@@ -297,7 +309,7 @@ def _step(c: SimConsts, s: SimState) -> SimState:
         share_ln=none, downgrade=no, park_addr=none,
         wake_addr=none, wake_time=zero,
         acq_inc=no, waited_inc=no, hand_add=zero, hand_inc=no,
-        rel_idx=none, rel_val=zero)
+        rel_idx=none, rel_val=zero, t0_new=i32(-2), lat_idx=none)
 
     def h_nop():
         return default
@@ -453,10 +465,24 @@ def _step(c: SimConsts, s: SimState) -> SimState:
         rt = rel_time[lidx]
         waited = cc > 0
         got = waited & (rt >= 0)
+        # acquire latency: a pending TSTART mark is consumed into the log2
+        # histogram (marks survive aborted attempts until the next ACQ, so
+        # redraw loops measure from the FIRST attempt)
+        t0v = acq_t0[t]
+        marked = t0v >= 0
+        blat = jnp.maximum(now - t0v, 0)
+        bucket = (blat >= (i32(1) << jnp.arange(N_LAT_BUCKETS - 1,
+                                                dtype=jnp.int32))
+                  ).sum().astype(jnp.int32)
         return default._replace(
             acq_inc=yes, waited_inc=waited,
             hand_add=i32(jnp.where(got, now - rt, 0)), hand_inc=got,
-            rel_idx=lidx, rel_val=i32(jnp.where(got, -1, rt)))
+            rel_idx=lidx, rel_val=i32(jnp.where(got, -1, rt)),
+            lat_idx=i32(jnp.where(marked, bucket, -1)),
+            t0_new=i32(jnp.where(marked, -1, -2)))
+
+    def h_tstart():
+        return default._replace(t0_new=now)
 
     def h_rel():
         return default._replace(rel_idx=rb, rel_val=now)
@@ -513,6 +539,7 @@ def _step(c: SimConsts, s: SimState) -> SimState:
     handlers[isa.REL] = h_rel
     handlers[isa.HALT] = h_halt
     handlers[isa.SPIN_GE] = h_spin_ge
+    handlers[isa.TSTART] = h_tstart
     handlers.append(h_commit)   # pseudo-opcode isa.N_OPS
     handlers.append(h_noevent)  # pseudo-opcode isa.N_OPS + 1
 
@@ -583,10 +610,16 @@ def _step(c: SimConsts, s: SimState) -> SimState:
     hs2 = hand_sum + e.hand_add
     hc2 = hand_cnt + e.hand_inc.astype(jnp.int32)
 
+    # acquire-latency mark + log2 histogram
+    t02 = acq_t0.at[actor].set(jnp.where(e.t0_new != -2, e.t0_new,
+                                         acq_t0[actor]))
+    li = jnp.where(e.lat_idx >= 0, e.lat_idx, 0)
+    lh2 = lat_hist.at[li].add((e.lat_idx >= 0).astype(jnp.int32))
+
     return SimState(nt2, pc2, regs2, prng2, mem2, sh2, dr2,
                     pa2, pv2, pt2, sp2, wd2,
                     acq2, wacq2, rel2, hs2, hc2,
-                    events + live.astype(jnp.int32))
+                    events + live.astype(jnp.int32), t02, lh2)
 
 
 def _initial_state(n_threads: int, mem_words: int, n_locks: int,
@@ -613,6 +646,8 @@ def _initial_state(n_threads: int, mem_words: int, n_locks: int,
         hand_sum=jnp.zeros((), jnp.int32),
         hand_cnt=jnp.zeros((), jnp.int32),
         events=jnp.zeros((), jnp.int32),
+        acq_t0=jnp.full(n_threads, -1, jnp.int32),
+        lat_hist=jnp.zeros(N_LAT_BUCKETS, jnp.int32),
     )
 
 
@@ -650,6 +685,7 @@ def _make_run(n_threads: int, mem_words: int, n_locks: int):
             "events": final.events,
             "sleeping": (final.spin_addr >= 0).sum(),
             "grant_value": final.mem,  # full memory; callers slice what they need
+            "lat_hist": final.lat_hist,
         }
 
     return run
@@ -696,6 +732,8 @@ def _make_run_batched(n_threads: int, mem_words: int, n_locks: int):
             hand_sum=jnp.zeros(n_cells, jnp.int32),
             hand_cnt=jnp.zeros(n_cells, jnp.int32),
             events=jnp.zeros(n_cells, jnp.int32),
+            acq_t0=jnp.full((n_cells, n_threads), -1, jnp.int32),
+            lat_hist=jnp.zeros((n_cells, N_LAT_BUCKETS), jnp.int32),
         )
         vstep = jax.vmap(_step)
 
@@ -714,6 +752,7 @@ def _make_run_batched(n_threads: int, mem_words: int, n_locks: int):
             "events": final.events,
             "sleeping": (final.spin_addr >= 0).sum(1),
             "grant_value": final.mem,
+            "lat_hist": final.lat_hist,
         }
 
     return run
@@ -811,6 +850,8 @@ def _make_run_sched(n_threads: int, mem_words: int, n_locks: int,
                                                  mode="drop"),
                 "grant_value":
                     outs["grant_value"].at[idx].set(s.mem, mode="drop"),
+                "lat_hist":
+                    outs["lat_hist"].at[idx].set(s.lat_hist, mode="drop"),
             }
             # work stealing: the i-th finished lane (in lane order) claims
             # queue slot next_cell + i; lanes past the queue end park
@@ -835,6 +876,7 @@ def _make_run_sched(n_threads: int, mem_words: int, n_locks: int,
             "events": jnp.zeros(n_cells, jnp.int32),
             "sleeping": jnp.zeros(n_cells, jnp.int32),
             "grant_value": jnp.zeros((n_cells, mem_words), jnp.int32),
+            "lat_hist": jnp.zeros((n_cells, N_LAT_BUCKETS), jnp.int32),
         }
         carry = (lane_cell0, jnp.int32(lanes),
                  jax.vmap(cell_init)(lane_cell0), outs0)

@@ -45,7 +45,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from . import isa
-from .engine import INF, SimConsts, _initial_state, _step, bitset_words
+from .engine import (INF, N_LAT_BUCKETS, SimConsts, _initial_state, _step,
+                     bitset_words)
 
 # Events per in-kernel burst between termination checks.  The burst loop
 # costs ``ceil(events / chunk) * chunk`` steps per cell (overshoot steps are
@@ -55,7 +56,8 @@ DEFAULT_PALLAS_CHUNK = 128
 
 # Result keys, in kernel-output order (the engine's sweep-output contract).
 OUT_KEYS = ("acquisitions", "waited_acquisitions", "handover_sum",
-            "handover_count", "events", "sleeping", "grant_value")
+            "handover_count", "events", "sleeping", "grant_value",
+            "lat_hist")
 
 
 def cell_state_bytes(n_threads: int, mem_words: int) -> int:
@@ -69,7 +71,8 @@ def cell_state_bytes(n_threads: int, mem_words: int) -> int:
     n_lines = mem_words // isa.WORDS_PER_SECTOR
     words = (mem_words
              + n_lines * (bitset_words(n_threads) + 1)
-             + n_threads * (8 + isa.N_REGS))
+             + n_threads * (9 + isa.N_REGS)
+             + N_LAT_BUCKETS)
     return 4 * words
 
 
@@ -100,10 +103,11 @@ def make_run_pallas(n_threads: int, mem_words: int, n_locks: int,
         Refs hold this cell's (1, ...) blocks; indexing row 0 materializes
         the cell's state in kernel memory, where the whole event burst runs
         before the final stats are stored back.  ``rest`` is the four fault
-        refs (when ``n_faults > 0``) followed by the seven output refs.
+        refs (when ``n_faults > 0``) followed by the eight output refs.
         """
-        fault_refs, out_refs = rest[:-7], rest[-7:]
-        acq_ref, wacq_ref, hs_ref, hc_ref, ev_ref, slp_ref, mem_ref = out_refs
+        fault_refs, out_refs = rest[:-8], rest[-8:]
+        (acq_ref, wacq_ref, hs_ref, hc_ref, ev_ref, slp_ref, mem_ref,
+         lh_ref) = out_refs
         fault_fields = {}
         if fault_refs:
             fault_fields = dict(zip(
@@ -135,6 +139,7 @@ def make_run_pallas(n_threads: int, mem_words: int, n_locks: int,
         ev_ref[0] = s.events
         slp_ref[0] = (s.spin_addr >= 0).sum().astype(jnp.int32)
         mem_ref[0] = s.mem
+        lh_ref[0] = s.lat_hist
 
     def run(program, init_pc, init_regs, init_mem, n_active, seed,
             horizon, max_events, costs, wa_base, wa_mask, wa_size, *faults):
@@ -165,6 +170,7 @@ def make_run_pallas(n_threads: int, mem_words: int, n_locks: int,
                 scalar, scalar, scalar, scalar,            # hand_sum/cnt,
                 #                                            events, sleeping
                 pl.BlockSpec((1, mem_words), cell2),       # grant_value
+                pl.BlockSpec((1, N_LAT_BUCKETS), cell2),   # lat_hist
             ],
             out_shape=[
                 jax.ShapeDtypeStruct((n_cells, n_threads), i32),
@@ -174,6 +180,7 @@ def make_run_pallas(n_threads: int, mem_words: int, n_locks: int,
                 jax.ShapeDtypeStruct((n_cells,), i32),
                 jax.ShapeDtypeStruct((n_cells,), i32),
                 jax.ShapeDtypeStruct((n_cells, mem_words), i32),
+                jax.ShapeDtypeStruct((n_cells, N_LAT_BUCKETS), i32),
             ],
             interpret=interpret,
         )(program, init_pc, init_regs, init_mem, n_active, seed,

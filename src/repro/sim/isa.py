@@ -53,8 +53,11 @@ HALT = 33
 SPIN_GE = 34  # proceed when mem[regs[b]+imm] - regs[a] >= 0 in int32 wrap
 #               arithmetic (semaphore/frontier compare; a direct >= would
 #               deadlock when tickets wrap past INT32_MAX)
+TSTART = 35   # mark acquisition start: the NEXT executed ACQ on this thread
+#               records (now - mark) into the log2 acquire-latency histogram
+#               and clears the mark; an ACQ with no mark records nothing
 
-N_OPS = 35
+N_OPS = 36
 
 
 class OpInfo(NamedTuple):
@@ -118,6 +121,7 @@ OPCODES: dict[int, OpInfo] = {
     ACQ: OpInfo("ACQ", a="lidx", c="const", kind="lock"),
     REL: OpInfo("REL", b="lidx", kind="lock"),
     HALT: OpInfo("HALT", kind="halt"),
+    TSTART: OpInfo("TSTART", kind="lock"),
 }
 assert len(OPCODES) == N_OPS and sorted(OPCODES) == list(range(N_OPS))
 

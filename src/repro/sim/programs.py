@@ -20,8 +20,8 @@ from .isa import (ACQ, ADDI, ANDI, Asm, BEQ, BEQI, BGTI, BLEI, BNEI, CASZ,
                   OFF_TAIL, OFF_TICKET, PRNG, REL, R_AT, R_DX, R_G, R_K,
                   R_LIDX, R_LOCK, R_NODE, R_NX, R_T1, R_T2, R_TID, R_TX, R_U,
                   R_V, R_W, R_Z, SPIN_EQ, SPIN_EQI, SPIN_GE, SPIN_NE,
-                  SPIN_NEI, STORE, STOREI, SUB, SWAP, WORDS_PER_SECTOR,
-                  WORKI, WORKR)
+                  SPIN_NEI, STORE, STOREI, SUB, SWAP, TSTART,
+                  WORDS_PER_SECTOR, WORKI, WORKR)
 
 LT_THRESHOLD = 1  # the paper's LongTermThreshold (default; Layout overrides)
 
@@ -885,6 +885,7 @@ WORK_SCALE = 8  # cycles per PRNG step (mt19937 step ≈ a few ns on the X5-2);
 
 def build_mutexbench(lock: str, layout: Layout, *, cs_work: int = 4,
                      ncs_max: int = 200, cs_rand: tuple | None = None,
+                     outside_work: int = 0, collect_latency: bool = False,
                      work_scale: int = WORK_SCALE) -> np.ndarray:
     """MutexBench (paper §4.2): loop { acquire; CS; release; NCS }.
 
@@ -892,6 +893,15 @@ def build_mutexbench(lock: str, layout: Layout, *, cs_work: int = 4,
     locktorture (cs=20, ncs∈{20,400}, Figs 11/12) and the RRC profile via
     cs_rand=(lo, spread) (Fig 6).  CS/NCS are "PRNG steps" as in the paper,
     charged at `work_scale` cycles per step.
+
+    ``outside_work`` adds a FIXED delay of that many PRNG steps between the
+    release and the next acquisition attempt, *before* the random NCS draw —
+    the paper's "outside work" axis: deterministic time the thread is
+    guaranteed off the lock, which bounds the achievable arrival rate
+    independently of the ``ncs_max`` jitter.  ``collect_latency`` brackets
+    every acquisition with a TSTART mark so the engine's log2 acquire-latency
+    histogram (``lat_hist``) observes ``acquire-start -> ACQ`` per
+    acquisition; both default off so legacy programs are byte-identical.
     """
     if lock == "anderson" and layout.n_locks > 1 and not layout.private_arrays:
         # A cross-lock hash collision on a *boolean* flag array would grant
@@ -902,6 +912,8 @@ def build_mutexbench(lock: str, layout: Layout, *, cs_work: int = 4,
     if layout.n_locks > 1:
         asm.emit(PRNG, R_LIDX, 0, 0, layout.n_locks)
         asm.emit(MULI, R_LOCK, R_LIDX, 0, LOCK_STRIDE)
+    if collect_latency:
+        asm.emit(TSTART, 0, 0, 0)
     ACQUIRE_GEN[lock](asm, "a", layout)
     if cs_rand is not None:
         lo, spread = cs_rand
@@ -912,6 +924,8 @@ def build_mutexbench(lock: str, layout: Layout, *, cs_work: int = 4,
     elif cs_work > 0:
         asm.emit(WORKI, 0, 0, 0, cs_work * work_scale)
     RELEASE_GEN[lock](asm, "r", layout)
+    if outside_work > 0:
+        asm.emit(WORKI, 0, 0, 0, outside_work * work_scale)
     if ncs_max > 0:
         asm.emit(PRNG, R_W, 0, 0, ncs_max)
         asm.emit(MULI, R_W, R_W, 0, work_scale)
@@ -943,6 +957,7 @@ def build_occupancy_probe(lock: str, layout: Layout, *, cs_work: int = 2,
     if layout.n_locks > 1:
         asm.emit(PRNG, R_LIDX, 0, 0, layout.n_locks)
         asm.emit(MULI, R_LOCK, R_LIDX, 0, LOCK_STRIDE)
+    asm.emit(TSTART, 0, 0, 0)   # probes always exercise the latency path
     ACQUIRE_GEN[lock](asm, "a", layout)
     asm.emit(FADD, R_U, R_LOCK, 1, OCC_OFF)
     asm.emit(BLEI, R_U, 0, cap - 1, "cap_ok")
@@ -984,6 +999,7 @@ def build_rw_probe(layout: Layout, *, cs_work: int = 2,
     if layout.n_locks > 1:
         asm.emit(PRNG, R_LIDX, 0, 0, layout.n_locks)
         asm.emit(MULI, R_LOCK, R_LIDX, 0, LOCK_STRIDE)
+    asm.emit(TSTART, 0, 0, 0)   # probes always exercise the latency path
     ACQUIRE_GEN["twa-rw"](asm, "a", layout)
     asm.emit(BEQI, R_V, 0, 0, "rd_in")
     asm.emit(FADD, R_U, R_LOCK, RW_WRITER_W, OCC_OFF)  # writer enters

@@ -12,6 +12,8 @@ entry instead of one compile per thread count.  ``run_contention`` /
 from __future__ import annotations
 
 import itertools
+import math
+import os
 from dataclasses import dataclass, replace
 
 import numpy as np
@@ -43,6 +45,7 @@ class SweepCell:
     n_threads: int
     seed: int
     cs_work: int
+    outside_work: int
     private_arrays: bool
     costs: Costs
     wa_size: int
@@ -58,10 +61,13 @@ class SweepCell:
 class SweepSpec:
     """Declarative description of a lockVM parameter sweep.
 
-    The first ten fields are *axes*: each accepts a single value or a
-    sequence, and :meth:`cells` yields their cartesian product in field
-    order (locks outermost, reader_fraction innermost).  The remaining
-    fields are scalar knobs shared by every cell.  The ``sem_permits``
+    The leading fields (through ``abort_faults``) are *axes*: each accepts
+    a single value or a sequence, and :meth:`cells` yields their cartesian
+    product in field order (locks outermost, abort_faults innermost).  The
+    remaining fields are scalar knobs shared by every cell.  The
+    ``outside_work`` axis is a fixed delay (PRNG steps) between release and
+    the next acquisition attempt — guaranteed off-lock time that caps the
+    per-thread arrival rate independently of the random NCS draw.  The ``sem_permits``
     axis maps the mutex→semaphore continuum: permits=1 is a FIFO mutex,
     permits→T approaches uncontended entry (only twa-sem consumes it).
     The ``reader_fraction`` axis (percent of acquisitions that are reads)
@@ -82,6 +88,7 @@ class SweepSpec:
     threads: tuple | int = (1, 2, 4, 8, 16, 32, 64)
     seeds: tuple | int = (1, 2, 3)
     cs_work: tuple | int = 4
+    outside_work: tuple | int = 0        # fixed non-CS delay per iteration
     private_arrays: tuple | bool = False
     costs: tuple | Costs = DEFAULT_COSTS
     wa_size: tuple | int = 4096          # waiting-array slots (pow2, Fig 8)
@@ -97,19 +104,22 @@ class SweepSpec:
     horizon: int = DEFAULT_HORIZON
     max_events: int = DEFAULT_MAX_EVENTS
     count_collisions: bool = False       # TWA family: tally wakeups (Fig 8)
+    collect_latency: bool = False        # TSTART brackets -> lat_hist +
+    #                                      lat_p50/p99/p999 result columns
     preempt_cost: int = 4096             # stall cycles K per preemption
     fault_evt_span: int | None = None    # bound on fault event indices
 
     def cells(self) -> list[SweepCell]:
         return [SweepCell(lock=lk, n_threads=t, seed=s, cs_work=cw,
-                          private_arrays=pa, costs=co, wa_size=ws,
-                          long_term_threshold=lt, sem_permits=sp,
+                          outside_work=ow, private_arrays=pa, costs=co,
+                          wa_size=ws, long_term_threshold=lt, sem_permits=sp,
                           reader_fraction=rf, preempt_faults=pf,
                           spurious_faults=sf, abort_faults=af)
-                for lk, t, s, cw, pa, co, ws, lt, sp, rf, pf, sf, af
+                for lk, t, s, cw, ow, pa, co, ws, lt, sp, rf, pf, sf, af
                 in itertools.product(
                     _as_tuple(self.locks), _as_tuple(self.threads),
                     _as_tuple(self.seeds), _as_tuple(self.cs_work),
+                    _as_tuple(self.outside_work),
                     _as_tuple(self.private_arrays), _as_tuple(self.costs),
                     _as_tuple(self.wa_size),
                     _as_tuple(self.long_term_threshold),
@@ -171,7 +181,9 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
     for cell in cells:
         layout = spec.layout_for(cell)
         prog = build_mutexbench(cell.lock, layout, cs_work=cell.cs_work,
-                                ncs_max=spec.ncs_max, cs_rand=spec.cs_rand)
+                                ncs_max=spec.ncs_max, cs_rand=spec.cs_rand,
+                                outside_work=cell.outside_work,
+                                collect_latency=spec.collect_latency)
         pc, regs = init_state(layout)
         gen_mem = INIT_MEM_GEN.get(cell.lock)
         init_mem = gen_mem(layout) if gen_mem else np.zeros(layout.mem_words,
@@ -211,7 +223,8 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
         t = layout.n_threads
         res = {
             "lock": cell.lock, "n_threads": t, "seed": cell.seed,
-            "cs_work": cell.cs_work, "private_arrays": cell.private_arrays,
+            "cs_work": cell.cs_work, "outside_work": cell.outside_work,
+            "private_arrays": cell.private_arrays,
             "costs": cell.costs, "wa_size": cell.wa_size,
             "long_term_threshold": cell.long_term_threshold,
             "sem_permits": cell.sem_permits,
@@ -230,6 +243,7 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
             "sleeping": raw["sleeping"][i],
             "mem": raw["grant_value"][i, :layout.mem_words],
             "horizon": spec.horizon,
+            "n_locks": spec.n_locks,
             "mode": raw["mode"],          # resolved driver (mode="auto")
             "pad_stats": raw["pad_stats"],  # sweep-wide padding waste
         }
@@ -237,8 +251,62 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
         hc = int(res["handover_count"])
         res["avg_handover"] = (float(res["handover_sum"]) / hc if hc
                                else float("nan"))
+        if spec.collect_latency:
+            hist = np.asarray(raw["lat_hist"][i])
+            res["lat_hist"] = hist
+            res["lat_p50"] = hist_percentile(hist, 0.5)
+            res["lat_p99"] = hist_percentile(hist, 0.99)
+            res["lat_p999"] = hist_percentile(hist, 0.999)
         results.append(res)
+
+    store_path = os.environ.get(RESULTS_STORE_ENV)
+    if store_path:
+        from .results.store import ResultsStore
+        ResultsStore(store_path).append_sweep(results)
     return results
+
+
+# Environment hook: when set, every run_sweep() appends its result rows to
+# the JSONL results store at this path (see repro.sim.results).
+RESULTS_STORE_ENV = "REPRO_RESULTS_STORE"
+
+
+def hist_percentile(hist, q: float) -> float:
+    """The q-th percentile latency from a log2 acquire-latency histogram.
+
+    Bucket 0 holds exact-zero latencies; bucket k >= 1 holds latencies in
+    ``[2^(k-1), 2^k)`` and is represented by its inclusive upper edge
+    ``2^k - 1`` (pessimistic: tail percentiles never under-report).  The
+    sample of rank ``max(1, ceil(q * total))`` in bucket order picks the
+    bucket.  Returns NaN for an empty histogram (no TSTART-marked
+    acquisitions completed).
+    """
+    hist = np.asarray(hist)
+    total = int(hist.sum())
+    if total == 0:
+        return float("nan")
+    rank = max(1, math.ceil(q * total))
+    k = int(np.searchsorted(np.cumsum(hist), rank))
+    return float((1 << k) - 1 if k else 0)
+
+
+def latency_percentiles(result: dict,
+                        qs=(0.5, 0.99, 0.999)) -> tuple[float, ...]:
+    """Percentiles from one :func:`run_sweep` result row.
+
+    Raises ``ValueError`` if the sweep ran without latency collection —
+    percentile columns from a histogram-disabled sweep would silently be
+    garbage, exactly like reading collision counters from an
+    uninstrumented run.
+    """
+    if "lat_hist" not in result:
+        raise ValueError(
+            "latency_percentiles: this sweep ran with collect_latency=False "
+            "— the programs never emitted TSTART marks, so no acquire "
+            "latencies were sampled. Re-run with "
+            "SweepSpec(collect_latency=True) and read the lat_p* columns "
+            "(or pass the row here).")
+    return tuple(hist_percentile(result["lat_hist"], q) for q in qs)
 
 
 def sweep_curves(spec: SweepSpec, value: str = "throughput") -> dict:
@@ -248,6 +316,7 @@ def sweep_curves(spec: SweepSpec, value: str = "throughput") -> dict:
     runs); any cs_work/private_arrays/costs axes must be singletons.
     """
     assert len(_as_tuple(spec.cs_work)) == 1
+    assert len(_as_tuple(spec.outside_work)) == 1
     assert len(_as_tuple(spec.private_arrays)) == 1
     assert len(_as_tuple(spec.costs)) == 1
     assert len(_as_tuple(spec.wa_size)) == 1
@@ -267,7 +336,9 @@ def sweep_curves(spec: SweepSpec, value: str = "throughput") -> dict:
 
 
 def pack_engine_cells(cells, *, cs_work: int = 4, ncs_max: int = 200,
-                      n_locks: int = 1, seeds=1) -> tuple[np.ndarray, dict]:
+                      n_locks: int = 1, seeds=1,
+                      collect_latency: bool = False) -> tuple[np.ndarray,
+                                                              dict]:
     """Pad mixed ``(lock, n_threads, horizon)`` cells into one engine call.
 
     The :class:`SweepSpec` path shares a single horizon across the sweep;
@@ -282,7 +353,8 @@ def pack_engine_cells(cells, *, cs_work: int = 4, ncs_max: int = 200,
     progs, pcs, regss, mems = [], [], [], []
     for (lock, _, _), layout in zip(cells, layouts):
         prog = build_mutexbench(lock, layout, cs_work=cs_work,
-                                ncs_max=ncs_max)
+                                ncs_max=ncs_max,
+                                collect_latency=collect_latency)
         pc, regs = init_state(layout)
         pc, regs = pad_threads(pc, regs, t_max)
         gen_mem = INIT_MEM_GEN.get(lock)
