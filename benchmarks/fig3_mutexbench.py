@@ -1,6 +1,9 @@
 """Paper Figure 3 — MutexBench: aggregate lock throughput vs thread count.
 
 CS = 4 PRNG steps, NCS uniform in [0,200) steps (paper §4.2), on the lockVM.
+The sweep collects latency: alongside each throughput point the figure
+reports the contended acquire tail (lat_p50/p99/p999, cycles) — the
+paper-relevant columns the ROADMAP names after fig7.
 Claims validated (tests/test_sim_paper_claims.py):
   * ticket best at low T, collapses at high T;
   * TWA ≈ ticket at low T, ≥ MCS at high T.
@@ -14,8 +17,10 @@ read mix).  The whole figure — every registered lock × thread count × seed
 
 from __future__ import annotations
 
+import numpy as np
+
 from repro.sim import SIM_LOCKS
-from repro.sim.workloads import SweepSpec, sweep_curves
+from repro.sim.workloads import SweepSpec, run_sweep
 
 from .common import emit
 
@@ -25,11 +30,23 @@ LOCKS = tuple(SIM_LOCKS)
 
 def run(locks=LOCKS, threads=THREADS, runs: int = 3) -> dict:
     spec = SweepSpec(locks=tuple(locks), threads=tuple(threads),
-                     seeds=tuple(range(1, runs + 1)), cs_work=4, ncs_max=200)
-    curves = sweep_curves(spec)
+                     seeds=tuple(range(1, runs + 1)), cs_work=4, ncs_max=200,
+                     collect_latency=True)
+    results = run_sweep(spec)
+    by_cell = {}
+    for r in results:
+        by_cell.setdefault((r["lock"], r["n_threads"]), []).append(r)
+    curves = {}
     for lock in locks:
-        for t, tp in zip(threads, curves[lock]):
+        curves[lock] = []
+        for t in threads:
+            rs = by_cell[(lock, t)]
+            tp = float(np.median([r["throughput"] for r in rs]))
+            curves[lock].append(tp)
             emit(f"fig3/{lock}/threads={t}", f"{tp:.6f}", "acq_per_cycle")
+            for col in ("lat_p50", "lat_p99", "lat_p999"):
+                v = float(np.median([r[col] for r in rs]))
+                emit(f"fig3/{lock}/threads={t}/{col}", f"{v:.0f}", "cycles")
     t64 = {k: v[-1] for k, v in curves.items()}
     emit("fig3/twa_over_ticket@64", f"{t64['twa'] / t64['ticket']:.3f}",
          "paper: >>1")

@@ -1,12 +1,16 @@
 """Paper Figure 5 — "throw": fully serialized critical sections, zero
 non-critical work (the C++ runtime exception-table lock).  NCS = 0, CS = 4
 PRNG steps; beyond 2 threads the curve recapitulates MutexBench.  One
-SweepSpec, one compiled call.
+SweepSpec, one compiled call.  Fully-serialized CS is the worst-case
+acquire tail, so the sweep collects latency and reports lat_p50/p99/p999
+per point alongside throughput.
 """
 
 from __future__ import annotations
 
-from repro.sim.workloads import SweepSpec, sweep_curves
+import numpy as np
+
+from repro.sim.workloads import SweepSpec, run_sweep
 
 from .common import emit
 
@@ -16,11 +20,23 @@ LOCKS = ("ticket", "twa", "mcs")
 
 def run(threads=THREADS, runs: int = 3) -> dict:
     spec = SweepSpec(locks=LOCKS, threads=tuple(threads),
-                     seeds=tuple(range(1, runs + 1)), cs_work=4, ncs_max=0)
-    curves = sweep_curves(spec)
+                     seeds=tuple(range(1, runs + 1)), cs_work=4, ncs_max=0,
+                     collect_latency=True)
+    results = run_sweep(spec)
+    by_cell = {}
+    for r in results:
+        by_cell.setdefault((r["lock"], r["n_threads"]), []).append(r)
+    curves = {}
     for lock in LOCKS:
-        for t, tp in zip(threads, curves[lock]):
+        curves[lock] = []
+        for t in threads:
+            rs = by_cell[(lock, t)]
+            tp = float(np.median([r["throughput"] for r in rs]))
+            curves[lock].append(tp)
             emit(f"fig5/{lock}/threads={t}", f"{tp:.6f}", "acq_per_cycle")
+            for col in ("lat_p50", "lat_p99", "lat_p999"):
+                v = float(np.median([r[col] for r in rs]))
+                emit(f"fig5/{lock}/threads={t}/{col}", f"{v:.0f}", "cycles")
     emit("fig5/twa_over_ticket@64",
          f"{curves['twa'][-1] / curves['ticket'][-1]:.3f}", "paper: >>1")
     return curves

@@ -1,49 +1,88 @@
 """Framework-level admission benchmark — the paper's claim at the layer where
 this framework deploys it.
 
-N client threads wait for admission through a 1-lane TicketGate.  With plain
-single-tier waiting every client polls the grant counter (global spinning);
-with TWA two-tier waiting only the near-head clients do.  We report polls on
-the hot counter per handover — the coordination-layer analogue of the
-invalidation diameter — plus the distributed-lock variant over the KV store
-with per-key read telemetry.
+N client threads contend for a 1-lane admission gate, one run per registered
+``LockGate`` kind (``make_gate``): plain single-tier ``ticket`` polls the hot
+grant counter globally, ``twa`` bounds it with two-tier waiting, and the PR-5
+compositions ride along (``fissile-twa`` fast-window, ``twa-rw`` metadata
+reads).  We report polls on the hot counter per handover — the
+coordination-layer analogue of the invalidation diameter.
+
+The same admission geometry is then swept on the lockVM through one
+``SweepSpec`` (persisting into the results store when ``--results`` /
+``REPRO_RESULTS_STORE`` is set), so the framework-level numbers land next to
+their simulated counterparts under the ``admission/sim/*`` rows.  The
+distributed-lock variant over the KV store (per-key read telemetry) closes
+the figure.
 """
 
 from __future__ import annotations
 
 import threading
 
+import numpy as np
+
 from repro.core import DistributedTWALock, DistributedTicketLock, InMemoryKVStore
-from repro.serve.admission import TicketGate
+from repro.serve.admission import GATES, make_gate
+from repro.sim.workloads import SweepSpec, run_sweep
 
 from .common import emit
 
 N_CLIENTS = 24
+GATE_KINDS = tuple(GATES)          # ticket, twa, fissile-twa, twa-rw
+SIM_LOCKS = ("ticket", "twa", "fissile-twa", "twa-rw")
 
 
-def _gate_run(two_tier: bool, n_clients: int = N_CLIENTS) -> dict:
-    gate = TicketGate(1, two_tier=two_tier)
-    tickets = [gate.draw() for _ in range(n_clients)]
+def _gate_run(kind: str, n_clients: int = N_CLIENTS,
+              hold_s: float = 0.002) -> dict:
+    """One admission run through a pluggable gate: every client draws its own
+    ticket, waits for the lane, holds it for ``hold_s`` (so a real queue forms
+    and the waiters' polling shows up), and advances the grant itself — the
+    gate's counters are the only bookkeeping."""
+    import time
+
+    gate = make_gate(kind, 1)
     done = []
-    finished = [threading.Event() for _ in range(n_clients)]
+    order_lock = threading.Lock()
 
-    def client(tx):
+    def client():
+        tx = gate.draw()
         gate.wait(tx, timeout_s=60)   # blocks until this ticket holds the lane
-        done.append(tx)
-        finished[tx].set()
+        if kind == "twa-rw":
+            gate.read_metadata(gate.queue_depth)
+        with order_lock:
+            done.append(tx)
+        time.sleep(hold_s)
+        gate.advance()
 
-    ths = [threading.Thread(target=client, args=(t,)) for t in tickets]
+    ths = [threading.Thread(target=client) for _ in range(n_clients)]
     for t in ths:
         t.start()
-    # the "engine": hand the lane over only after the holder finished
-    for tx in tickets:
-        finished[tx].wait(30)
-        gate.advance()
     for t in ths:
         t.join(30)
     st = gate.poll_stats()
     st["fifo_ok"] = done == sorted(done)
     return st
+
+
+def _sim_sweep(smoke: bool) -> dict:
+    """The same geometry on the lockVM: 1 lock, N_CLIENTS threads, short CS.
+    Cells persist via the ``REPRO_RESULTS_STORE`` hook (``--results``)."""
+    spec = SweepSpec(locks=SIM_LOCKS, threads=(8, N_CLIENTS),
+                     seeds=(1,) if smoke else (1, 2, 3),
+                     cs_work=4, ncs_max=16,
+                     horizon=150_000 if smoke else 500_000)
+    by_cell = {}
+    for r in run_sweep(spec):
+        by_cell.setdefault((r["lock"], r["n_threads"]), []).append(
+            r["throughput"])
+    out = {}
+    for (lock, t), tps in sorted(by_cell.items()):
+        tp = float(np.median(tps))
+        out[(lock, t)] = tp
+        emit(f"admission/sim/{lock}/threads={t}", f"{tp:.6f}",
+             "acq_per_cycle")
+    return out
 
 
 def _dist_run(cls, n_workers: int = 12, hold_s: float = 0.004) -> dict:
@@ -76,17 +115,25 @@ def _dist_run(cls, n_workers: int = 12, hold_s: float = 0.004) -> dict:
             "acquisitions": len(order)}
 
 
-def run() -> dict:
+def run(smoke: bool = False) -> dict:
     out = {}
-    for label, two_tier in (("single_tier", False), ("twa_two_tier", True)):
-        st = _gate_run(two_tier)
+    for kind in GATE_KINDS:
+        st = _gate_run(kind)
         per_handover = st["grant_polls"] / N_CLIENTS
-        emit(f"admission/{label}/grant_polls_per_handover",
+        emit(f"admission/{kind}/grant_polls_per_handover",
              f"{per_handover:.1f}", f"fifo_ok={st['fifo_ok']}")
-        if two_tier:
-            emit("admission/twa_two_tier/slot_polls", st["slot_polls"],
+        if kind == "twa":
+            emit("admission/twa/slot_polls", st["slot_polls"],
                  f"long_term_entries={st['long_term_entries']}")
-        out[label] = st
+        if kind == "twa-rw":
+            emit("admission/twa-rw/metadata_reads", st["metadata_reads"],
+                 f"reader_overlap_max={st.get('reader_overlap_max', 0)}")
+        out[kind] = st
+    ratio = (out["ticket"]["grant_polls"]
+             / max(out["twa"]["grant_polls"], 1))
+    emit("admission/grant_polls_ticket_over_twa", f"{ratio:.2f}",
+         "paper analogue: >1 (two-tier bounds hot-counter polling)")
+    out["sim"] = _sim_sweep(smoke)
     for cls in (DistributedTicketLock, DistributedTWALock):
         st = _dist_run(cls)
         emit(f"admission/dist/{cls.name}/grant_key_reads",
@@ -100,4 +147,4 @@ def run() -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke=True)

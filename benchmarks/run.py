@@ -34,6 +34,7 @@ SUITES = [
     ("fig10", "benchmarks.fig10_rw_scaling"),
     ("fig11", "benchmarks.fig11_locktorture"),
     ("fig12deg", "benchmarks.fig12_degradation"),
+    ("fig13", "benchmarks.fig13_serve_e2e"),
     ("threads", "benchmarks.threads_microbench"),
     ("admission", "benchmarks.framework_admission"),
     ("bench_engine", "benchmarks.bench_engine"),

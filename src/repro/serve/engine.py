@@ -15,6 +15,7 @@ shardings.
 from __future__ import annotations
 
 import functools
+import os
 import threading
 from dataclasses import dataclass, field
 from typing import Any
@@ -25,9 +26,10 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.model import decode_step, forward, init_cache
-from .admission import TicketGate
+from .admission import LockGate, TicketGate, gate_kind_for_lock, make_gate
 from .kv_cache import insert_prefill
 from .sampler import sample
+from .trace import LockTraceRecorder
 
 Pytree = Any
 
@@ -53,7 +55,11 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params: Pytree, *, lanes: int = 4,
                  max_ctx: int = 256, pad_to: int = 16,
                  temperature: float = 0.0, seed: int = 0,
-                 two_tier: bool = True, threshold: int = 1) -> None:
+                 two_tier: bool = True, threshold: int = 1,
+                 lock: str | LockGate | None = None,
+                 record_trace: bool = False,
+                 store: str | None = None,
+                 workload: dict | None = None) -> None:
         self.cfg = cfg
         self.params = params
         self.lanes = lanes
@@ -65,7 +71,11 @@ class ServeEngine:
         self.temperature = temperature
         self._key = jax.random.PRNGKey(seed)
 
-        self.gate = TicketGate(lanes, two_tier=two_tier, threshold=threshold)
+        self.gate, self.lock_choice = self._make_gate(
+            lock, lanes=lanes, two_tier=two_tier, threshold=threshold,
+            store=store, workload=workload)
+        self.recorder = (LockTraceRecorder(lanes, gate=self.gate.kind)
+                         if record_trace else None)
         self._pending: dict[int, Request] = {}   # ticket -> request
         self._mutex = threading.Lock()
 
@@ -80,12 +90,51 @@ class ServeEngine:
             lambda p, c, t, pos: decode_step(p, c, t, pos, cfg),
             donate_argnums=(1,))
 
+    # -- lock selection ----------------------------------------------------------
+    @staticmethod
+    def _make_gate(lock, *, lanes, two_tier, threshold, store, workload):
+        """Resolve the ``lock=`` parameter into a gate + a provenance record.
+
+        ``None`` keeps the historical behaviour (``two_tier`` picks
+        twa vs single-tier ticket); a string names a registered gate or any
+        ``SIM_LOCKS`` algorithm; ``"auto"`` asks the results-store advisor;
+        a :class:`LockGate` instance is used as-is.
+        """
+        if isinstance(lock, LockGate):
+            return lock, {"source": "instance", "gate": lock.kind}
+        if lock is None:
+            kind = "twa" if two_tier else "ticket"
+            return (make_gate(kind, lanes, threshold=threshold),
+                    {"source": "default", "gate": kind})
+        if lock == "auto":
+            from repro.sim.results import ResultsStore, recommend_lock
+            path = store or os.environ.get("REPRO_RESULTS_STORE")
+            if not path:
+                raise ValueError(
+                    "lock='auto' needs a results store: pass store= or set "
+                    "REPRO_RESULTS_STORE")
+            rec = recommend_lock(ResultsStore(path),
+                                 workload if workload is not None
+                                 else {"n_threads": lanes})
+            kind = gate_kind_for_lock(rec["lock"])
+            return (make_gate(kind, lanes, threshold=threshold),
+                    {"source": "advisor", "gate": kind,
+                     "sim_lock": rec["lock"],
+                     "confidence": rec["confidence"],
+                     "throughput": rec["throughput"]})
+        return (make_gate(lock, lanes, threshold=threshold),
+                {"source": "explicit", "gate": gate_kind_for_lock(lock)
+                 if lock not in ("ticket", "twa", "fissile-twa", "twa-rw")
+                 else lock})
+
     # -- client side -----------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16, eos_id: int = -1) -> Request:
         req = Request(rid=-1, prompt=list(prompt),
                       max_new_tokens=max_new_tokens, eos_id=eos_id)
         req.ticket = self.gate.draw()
         req.rid = req.ticket
+        if self.recorder is not None:
+            self.recorder.on_draw(req.ticket)
         with self._mutex:
             self._pending[req.ticket] = req
         return req
@@ -125,6 +174,8 @@ class ServeEngine:
         self.lane_pos[lane] = L
         self.lane_last[lane] = first
         req.admitted_at_step = self.step_count
+        if self.recorder is not None:
+            self.recorder.on_grant(req.ticket)
         req.tokens_out.append(first)
         self._finish_if_done(lane)
 
@@ -139,6 +190,8 @@ class ServeEngine:
         if hit_eos or full or out_of_ctx:
             req.finished_at_step = self.step_count
             self.lane_req[lane] = None
+            if self.recorder is not None:
+                self.recorder.on_release(req.ticket)
             req.done.set()
             self.gate.advance()          # handover: next ticket admitted FIFO
 
@@ -195,5 +248,21 @@ class ServeEngine:
         raise RuntimeError("run() exceeded max_steps")
 
     # -- stats -------------------------------------------------------------------
+    def queue_depth(self) -> int:
+        """Admission-metadata read, routed through the gate's read path (the
+        read-mostly traffic ``twa-rw`` keeps off the hot counters)."""
+        if self.recorder is not None:
+            self.recorder.on_read()
+        return self.gate.read_metadata(self.gate.queue_depth)
+
     def stats(self) -> dict:
-        return {"steps": self.step_count, **self.gate.poll_stats()}
+        if self.recorder is not None:
+            self.recorder.on_read()
+        polls = self.gate.read_metadata(self.gate.poll_stats)
+        return {"steps": self.step_count, "lock": self.lock_choice, **polls}
+
+    def finish_trace(self):
+        """Finalize and return the recorded :class:`LockTrace`."""
+        if self.recorder is None:
+            raise ValueError("engine was not constructed with record_trace=True")
+        return self.recorder.to_trace()

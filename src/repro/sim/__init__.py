@@ -9,12 +9,19 @@ from .programs import (ACQUIRE_GEN, INIT_MEM_GEN, LT_THRESHOLD, Layout,
                        build_occupancy_probe, build_rw_probe, init_state,
                        pad_mem, pad_program, pad_threads,
                        read_collision_counters)
+from .traces import (TraceLayout, TraceWorkload, build_trace_bench,
+                     quantize_trace, trace_init_mem, trace_layout_for,
+                     trace_sweep_spec, trace_workload_coords,
+                     workload_from_meta)
 from .workloads import (SweepCell, SweepSpec, fig1_invalidation_diameter,
                         fig2_interlock_interference, median_throughput,
                         mutexbench_curve, pack_engine_cells, run_contention,
                         run_sweep, sweep_curves)
 
 __all__ = [
+    "TraceLayout", "TraceWorkload", "build_trace_bench", "quantize_trace",
+    "trace_init_mem", "trace_layout_for", "trace_sweep_spec",
+    "trace_workload_coords", "workload_from_meta",
     "Costs", "DEFAULT_COSTS", "run_sim", "debug_states", "choose_mode",
     "EVENT_ORDER_CONTRACT", "Layout", "SIM_LOCKS", "PROG_LEN",
     "LT_THRESHOLD", "build_mutexbench", "build_invalidation_diameter",

@@ -39,6 +39,9 @@ Fuzz-scale switches:
   * ``--fault-fraction``  — decorate that fraction of generated cases with
     a drawn fault schedule (preemptions / spurious wakes / aborts); 0
     reproduces historical fault-free batches byte for byte.
+  * ``--trace-fraction``  — replace that fraction of generated cases with
+    trace-compiled workloads (quantized arrival/hold tables, see
+    ``repro.sim.traces``); 0 reproduces historical batches byte for byte.
   * ``--coverage-in``     — seed the coverage map from a previous run's
     ``--coverage-report`` JSON, so novelty judgments (and the promoted
     pool) are cumulative across nightly runs.
@@ -134,6 +137,10 @@ def main(argv=None) -> int:
                     help="fraction of generated cases decorated with a "
                          "drawn fault schedule (0 = fault-free batches, "
                          "byte-identical to historical runs)")
+    ap.add_argument("--trace-fraction", type=float, default=0.0,
+                    help="fraction of generated cases replaced with "
+                         "trace-compiled workloads (0 = historical "
+                         "batches, byte-identical)")
     ap.add_argument("--coverage-in", default="",
                     help="seed the coverage map from a previous run's "
                          "--coverage-report JSON (cumulative novelty)")
@@ -170,7 +177,8 @@ def main(argv=None) -> int:
     if args.steer:
         res = steer(args.cases, seed, modes=modes,
                     batch_size=args.batch_size, coverage=coverage,
-                    fault_fraction=args.fault_fraction)
+                    fault_fraction=args.fault_fraction,
+                    trace_fraction=args.trace_fraction)
         report, coverage = res.report, res.coverage
         print(f"steered {report.n_cases} cases (seed={seed}): "
               f"{len(res.pool)} promoted, {res.n_mutants} mutants, "
@@ -189,7 +197,8 @@ def main(argv=None) -> int:
             from .coverage import CoverageMap
             coverage = CoverageMap()
         scenarios = generate_batch(args.cases, seed,
-                                   fault_fraction=args.fault_fraction)
+                                   fault_fraction=args.fault_fraction,
+                                   trace_fraction=args.trace_fraction)
         print(f"generated {len(scenarios)} scenarios (seed={seed})")
         report = fuzz(scenarios, modes=modes, oracle_mutate=mutate,
                       sched_seed=seed, batch_oracle=args.batch_oracle,

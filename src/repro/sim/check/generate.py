@@ -399,6 +399,109 @@ def gen_composed_scenario(rng: np.random.Generator,
     )
 
 
+class _SynthTrace:
+    """Duck-typed stand-in for ``repro.serve.trace.LockTrace``.
+
+    The fuzzer exercises the trace *pipeline* (quantizer → compiler)
+    without importing the serve layer — sim must stay below serve in the
+    dependency order.  Only the attributes ``quantize_trace`` reads.
+    """
+
+    def __init__(self, arrival_s, grant_s, release_s, n_reads, name):
+        self.arrival_s = np.asarray(arrival_s, np.float64)
+        self.grant_s = np.asarray(grant_s, np.float64)
+        self.release_s = np.asarray(release_s, np.float64)
+        self.n_reads = int(n_reads)
+        self.name = name
+
+    @property
+    def hold_s(self):
+        return self.release_s - self.grant_s
+
+    @property
+    def inter_acquire_s(self):
+        g = np.sort(self.grant_s)
+        return np.diff(g) if len(g) > 1 else np.zeros(0)
+
+    @property
+    def reader_fraction(self):
+        total = self.n_reads + len(self.arrival_s)
+        return int(round(100.0 * self.n_reads / total)) if total else 0
+
+
+def gen_trace_scenario(rng: np.random.Generator,
+                       lock: str | None = None) -> Scenario:
+    """A trace-compiled workload in the fuzz pool.
+
+    Synthesizes a small serve-like arrival/hold process, quantizes it
+    through the real pipeline (:func:`repro.sim.traces.quantize_trace`)
+    and compiles with :func:`~repro.sim.traces.build_trace_bench` — so the
+    differential and the invariant catalog cover the trace path's table
+    loads and arrival preamble, not just the synthetic-axes programs.
+    Durations are drawn small (unit_s=1, holds ≤ 20 units) so every fuzz
+    horizon still sees acquisitions from every thread.
+    """
+    from ..traces import (build_trace_bench, quantize_trace, trace_init_mem,
+                          trace_layout_for)
+    if lock is None:
+        lock = str(rng.choice(SIM_LOCKS))
+    geo = gen_geometry(rng, lock)
+    geo["n_locks"] = 1   # trace programs replay a single admission lock
+    n_req = int(rng.integers(8, 33))
+    arrival = np.sort(rng.uniform(0.0, 40.0, n_req))
+    grant = arrival + rng.uniform(0.0, 5.0, n_req)
+    release = grant + rng.uniform(1.0, 20.0, n_req)
+    trace = _SynthTrace(arrival, grant, release,
+                        n_reads=int(rng.integers(0, n_req)),
+                        name=f"fuzz-{geo['seed']}")
+    tw = quantize_trace(trace, n_threads=geo["n_threads"], table_size=8,
+                        max_steps=24, unit_s=1.0)
+    layout = trace_layout_for(tw, Layout(
+        n_threads=geo["n_threads"], n_locks=1,
+        wa_size=geo["wa_size"], private_arrays=geo["private_arrays"],
+        long_term_threshold=geo["long_term_threshold"],
+        sem_permits=geo["sem_permits"],
+        reader_fraction=geo["reader_fraction"],
+        timo_patience=geo["timo_patience"]))
+    assert layout.mem_words <= PAD_MEM_WORDS, layout.mem_words
+    collect_latency = bool(rng.integers(0, 2))
+    prog = build_trace_bench(lock, layout, tw,
+                             collect_latency=collect_latency)
+    pc, regs = init_state(layout)
+    pc, regs = pad_threads(pc, regs, PAD_THREADS)
+    init_mem = trace_init_mem(lock, layout, tw)
+    return Scenario(
+        kind="composed", lock=lock,
+        program=pad_program(prog),
+        init_pc=pc, init_regs=regs,
+        init_mem=pad_mem(init_mem, PAD_MEM_WORDS),
+        n_active=geo["n_threads"],
+        wa_base=layout.wa_base, wa_size=layout.wa_size,
+        horizon=geo["horizon"], max_events=geo["max_events"],
+        seed=geo["seed"], costs=geo["costs"],
+        meta={
+            "cap": layout.sem_permits if lock == "twa-sem" else 1,
+            "probed": False, "rw": lock == "twa-rw",
+            "fissile": lock == "fissile-twa",
+            "count_collisions": False,
+            "ticket_fifo": lock in TICKET_FIFO_LOCKS,
+            "grant_word": lock in GRANT_WORD_LOCKS,
+            "ticket_base": 0,
+            "workload": "trace",
+            "trace": tw.as_meta(),
+            "layout": {"n_threads": geo["n_threads"],
+                       "n_locks": 1,
+                       "wa_size": geo["wa_size"],
+                       "private_arrays": geo["private_arrays"],
+                       "long_term_threshold": geo["long_term_threshold"],
+                       "sem_permits": geo["sem_permits"],
+                       "reader_fraction": geo["reader_fraction"],
+                       "count_collisions": False,
+                       "timo_patience": geo["timo_patience"]},
+        },
+    )
+
+
 def _harness_body_span(program: np.ndarray) -> tuple[int, int] | None:
     """``[lo, hi)`` of a random program's harness body, or ``None``.
 
@@ -555,20 +658,24 @@ def with_fault_schedule(scenario: Scenario,
 
 def generate_batch(n_cases: int, seed: int,
                    composed_fraction: float = 0.6,
-                   fault_fraction: float = 0.0) -> list[Scenario]:
+                   fault_fraction: float = 0.0,
+                   trace_fraction: float = 0.0) -> list[Scenario]:
     """A deterministic mixed batch: ``composed_fraction`` of the cases wrap
     the ``SIM_LOCKS`` generators round-robin (so any batch of >= 14/0.6 =
     24 cases covers every lock at least once), the rest are random ISA
     programs.
 
     ``fault_fraction`` of the cases additionally carry a random fault
-    schedule (:func:`with_fault_schedule`).  The schedules come from a
-    *separate* PRNG stream keyed off ``seed``, so ``fault_fraction=0``
-    reproduces historical batches byte-for-byte and raising it never
-    perturbs the underlying scenarios — only decorates them.
+    schedule (:func:`with_fault_schedule`).  ``trace_fraction`` of the
+    cases are *replaced* by trace-compiled workloads
+    (:func:`gen_trace_scenario`, round-robin over the locks too).  Both
+    come from *separate* PRNG streams keyed off ``seed``, so leaving a
+    fraction at 0 reproduces historical batches byte-for-byte and raising
+    one never perturbs the scenarios the other streams produce.
     """
     rng = np.random.default_rng(seed)
     fault_rng = np.random.default_rng((int(seed) ^ 0xFA017) & 0xFFFFFFFF)
+    trace_rng = np.random.default_rng((int(seed) ^ 0x7AACE) & 0xFFFFFFFF)
     out = []
     n_composed = min(n_cases, int(round(n_cases * composed_fraction)))
     for i in range(n_cases):
@@ -577,6 +684,10 @@ def generate_batch(n_cases: int, seed: int,
             out.append(gen_composed_scenario(rng, lock))
         else:
             out.append(gen_random_scenario(rng))
+    if trace_fraction > 0:
+        out = [gen_trace_scenario(trace_rng, SIM_LOCKS[i % len(SIM_LOCKS)])
+               if trace_rng.random() < trace_fraction else s
+               for i, s in enumerate(out)]
     if fault_fraction > 0:
         out = [with_fault_schedule(s, fault_rng)
                if fault_rng.random() < fault_fraction else s

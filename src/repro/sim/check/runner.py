@@ -285,7 +285,8 @@ def steer(n_cases: int, seed: int, modes: tuple = MODES,
           coverage=None, pool: list | None = None, batch_size: int = 256,
           mutate_fraction: float = 0.5, pool_cap: int = 512,
           composed_fraction: float = 0.6,
-          fault_fraction: float = 0.0) -> SteerResult:
+          fault_fraction: float = 0.0,
+          trace_fraction: float = 0.0) -> SteerResult:
     """Coverage-guided fuzzing: novel cases are promoted and mutated.
 
     Runs ``n_cases`` through :func:`fuzz` (batch oracle + coverage) in
@@ -300,7 +301,10 @@ def steer(n_cases: int, seed: int, modes: tuple = MODES,
 
     ``fault_fraction`` of each freshly generated round is decorated with a
     drawn fault schedule (see ``generate_batch``); mutation then keeps
-    redrawing those schedules on promoted cases.
+    redrawing those schedules on promoted cases.  ``trace_fraction``
+    replaces that share of each round with trace-compiled workloads
+    (``gen_trace_scenario``), putting the trace pipeline's table loads and
+    arrival preambles under the same differential.
 
     Passing an existing ``coverage`` map (e.g. loaded from a previous
     nightly's artifact) makes novelty judgments cumulative across runs.
@@ -327,7 +331,8 @@ def steer(n_cases: int, seed: int, modes: tuple = MODES,
                                           + np.uint32(7919 * round_i))
                                          & np.uint32(0x7FFFFFFF)),
                                 composed_fraction=composed_fraction,
-                                fault_fraction=fault_fraction)
+                                fault_fraction=fault_fraction,
+                                trace_fraction=trace_fraction)
         # stamp before fuzz so promoted scenarios carry their placement
         # pins (fuzz re-stamps idempotently)
         batch = stamp_sched_geometry(batch, seed + round_i)

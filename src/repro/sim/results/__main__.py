@@ -59,6 +59,8 @@ def cmd_summary(args) -> None:
         return
     locks = sorted({r["lock"] for r in rows})
     print(f"locks:   {', '.join(locks)}")
+    workloads = sorted({str(r.get("workload", "synthetic")) for r in rows})
+    print(f"workload:{', '.join(workloads)}")
     for axis in ("n_threads", "cs_work", "outside_work", "reader_fraction",
                  "wa_size"):
         vals = sorted({r[axis] for r in rows})

@@ -16,16 +16,21 @@ from __future__ import annotations
 
 import numpy as np
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # Coordinate keys: together they name WHERE in workload space the row was
 # measured.  Every row must carry every one of them — the advisor's exact
-# lookup and nearest-bin fallback both match on these.
+# lookup and nearest-bin fallback both match on these.  ``workload``
+# (schema v2) names the workload *generator*: "synthetic" for the scalar
+# mutexbench axes, "trace:<name>" for a cell whose program was compiled
+# from a recorded serve trace (repro.sim.traces) — the cs_work /
+# outside_work / reader_fraction coordinates of a trace row are the
+# trace's representative medians, not program constants.
 COORD_KEYS = (
     "lock", "n_threads", "seed", "cs_work", "outside_work",
     "private_arrays", "wa_size", "long_term_threshold", "sem_permits",
     "reader_fraction", "preempt_faults", "spurious_faults", "abort_faults",
-    "n_locks", "horizon", "mode", "costs",
+    "n_locks", "horizon", "mode", "costs", "workload",
 )
 
 # Value keys: WHAT was measured there.  The lat_* columns are None for
@@ -39,12 +44,15 @@ VALUE_KEYS = (
 ALL_KEYS = COORD_KEYS + VALUE_KEYS + ("schema_version",)
 
 # Defaults filled in by migrate() for coordinates that predate their axis.
+# Every pre-v2 row was a synthetic-axes sweep (the trace compiler did not
+# exist), so "synthetic" is a fact about old rows, not a guess.
 _V0_COORD_DEFAULTS = {
     "outside_work": 0,
     "preempt_faults": 0,
     "spurious_faults": 0,
     "abort_faults": 0,
     "mode": "unknown",
+    "workload": "synthetic",
 }
 
 
@@ -90,6 +98,7 @@ def row_from_result(res: dict) -> dict:
         "horizon": int(res["horizon"]),
         "mode": str(res["mode"]),
         "costs": _jsonify(res["costs"].to_array()),
+        "workload": str(res.get("workload", "synthetic")),
         "throughput": float(res["throughput"]),
         "avg_handover": float(res["avg_handover"]),
         "acquisitions": int(np.asarray(res["acquisitions"]).sum()),
@@ -114,7 +123,10 @@ def migrate(row: dict) -> dict:
     column; they migrate by filling the axis defaults — a v0 measurement
     IS the outside_work=0, fault-free point — with ``None`` latency
     columns (those sweeps sampled nothing, and inventing zeros would let
-    percentile queries silently succeed on unmeasured data).
+    percentile queries silently succeed on unmeasured data).  Version 1
+    rows additionally lack the ``workload`` coordinate; they fill
+    ``"synthetic"`` — every pre-v2 sweep was one (``setdefault`` makes the
+    v0 fills no-ops on rows that already carry their axes).
     """
     version = int(row.get("schema_version", 0))
     if version > SCHEMA_VERSION:

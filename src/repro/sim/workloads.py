@@ -108,6 +108,10 @@ class SweepSpec:
     #                                      lat_p50/p99/p999 result columns
     preempt_cost: int = 4096             # stall cycles K per preemption
     fault_evt_span: int | None = None    # bound on fault event indices
+    trace: object | None = None          # TraceWorkload: replay a recorded
+    #                                      serve trace instead of the scalar
+    #                                      cs_work/outside_work axes (see
+    #                                      repro.sim.traces.trace_sweep_spec)
 
     def cells(self) -> list[SweepCell]:
         return [SweepCell(lock=lk, n_threads=t, seed=s, cs_work=cw,
@@ -180,14 +184,26 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
     built = []
     for cell in cells:
         layout = spec.layout_for(cell)
-        prog = build_mutexbench(cell.lock, layout, cs_work=cell.cs_work,
-                                ncs_max=spec.ncs_max, cs_rand=spec.cs_rand,
-                                outside_work=cell.outside_work,
-                                collect_latency=spec.collect_latency)
-        pc, regs = init_state(layout)
-        gen_mem = INIT_MEM_GEN.get(cell.lock)
-        init_mem = gen_mem(layout) if gen_mem else np.zeros(layout.mem_words,
-                                                            np.int32)
+        if spec.trace is not None:
+            # Trace-compiled cell: CS/outside work come from the recorded
+            # distribution tables, not the scalar axes (which the spec pins
+            # to the trace's representative values for coordinate purposes).
+            from .traces import (build_trace_bench, trace_init_mem,
+                                 trace_layout_for)
+            layout = trace_layout_for(spec.trace, layout)
+            prog = build_trace_bench(cell.lock, layout, spec.trace,
+                                     collect_latency=spec.collect_latency)
+            pc, regs = init_state(layout)
+            init_mem = trace_init_mem(cell.lock, layout, spec.trace)
+        else:
+            prog = build_mutexbench(cell.lock, layout, cs_work=cell.cs_work,
+                                    ncs_max=spec.ncs_max, cs_rand=spec.cs_rand,
+                                    outside_work=cell.outside_work,
+                                    collect_latency=spec.collect_latency)
+            pc, regs = init_state(layout)
+            gen_mem = INIT_MEM_GEN.get(cell.lock)
+            init_mem = (gen_mem(layout) if gen_mem
+                        else np.zeros(layout.mem_words, np.int32))
         built.append((layout, prog, pc, regs, init_mem))
 
     t_max = max(layout.n_threads for layout, *_ in built)
@@ -246,6 +262,8 @@ def run_sweep(spec: SweepSpec, *, mode: str = "auto",
             "n_locks": spec.n_locks,
             "mode": raw["mode"],          # resolved driver (mode="auto")
             "pad_stats": raw["pad_stats"],  # sweep-wide padding waste
+            "workload": (f"trace:{spec.trace.name}" if spec.trace is not None
+                         else "synthetic"),
         }
         res["throughput"] = float(res["acquisitions"].sum()) / spec.horizon
         hc = int(res["handover_count"])

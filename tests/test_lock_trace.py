@@ -1,0 +1,172 @@
+"""LockGate protocol + LockTrace recording: registry resolution, waiting
+telemetry (including the slot-hash hoist regression), metadata-read
+routing per gate kind, the recorder/.npz round-trip, and ServeEngine's
+``lock=`` resolution — all without instantiating a model."""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve import (FissileTWAGate, LockTraceRecorder, RWTWAGate,
+                         TWAGate, TicketGate, gate_kind_for_lock, load_trace,
+                         make_gate)
+from repro.serve.engine import ServeEngine
+from repro.serve.trace import TRACE_VERSION
+from repro.sim import SIM_LOCKS
+
+
+# ---------------------------------------------------------------------------
+# Gate registry
+# ---------------------------------------------------------------------------
+
+def test_make_gate_registry():
+    g = make_gate("ticket", 2)
+    assert isinstance(g, TicketGate) and g.kind == "ticket"
+    assert g.two_tier is False           # the single-tier baseline
+    assert isinstance(make_gate("twa", 2), TWAGate)
+    assert isinstance(make_gate("fissile-twa", 2), FissileTWAGate)
+    assert isinstance(make_gate("twa-rw", 2), RWTWAGate)
+    with pytest.raises(ValueError, match="unknown gate"):
+        make_gate("nope", 2)
+
+
+def test_every_sim_lock_resolves_to_a_gate():
+    """recommend_lock answers in SIM_LOCKS names; each must map to the gate
+    implementing its waiting policy."""
+    for lock in SIM_LOCKS:
+        gate = make_gate(lock, 2)
+        assert gate.kind == gate_kind_for_lock(lock)
+    assert gate_kind_for_lock("mcs") == "ticket"       # queue locks: 1-tier
+    assert gate_kind_for_lock("twa-sem") == "twa"      # TWA family: two-tier
+    assert gate_kind_for_lock("fissile-twa") == "fissile-twa"
+
+
+# ---------------------------------------------------------------------------
+# Waiting telemetry
+# ---------------------------------------------------------------------------
+
+def test_slot_hash_once_per_long_term_entry():
+    """Hash-hoist regression: the waiting-array slot for (lock, ticket) is
+    loop-invariant, so it must be derived ONCE per long-term entry — never
+    once per poll.  slot_hashes counts index_for calls."""
+    gate = TWAGate(1, threshold=1)
+    txs = [gate.draw() for _ in range(4)]   # tx0 holds; tx2, tx3 long-term
+    ths = [threading.Thread(target=gate.wait, args=(tx,),
+                            kwargs={"timeout_s": 20}) for tx in txs[1:]]
+    for t in ths:
+        t.start()
+    time.sleep(0.08)                        # let long-term waiters park+poll
+    for _ in txs:
+        time.sleep(0.02)
+        gate.advance()
+    for t in ths:
+        t.join(20)
+    st = gate.poll_stats()
+    assert st["long_term_entries"] >= 1
+    assert st["slot_hashes"] == st["long_term_entries"]
+    assert st["slot_polls"] > st["slot_hashes"]
+
+
+def test_fissile_fast_window_resolves_without_the_array():
+    gate = FissileTWAGate(1)
+    gate.wait(gate.draw())                  # uncontended: fast window wins
+    st = gate.poll_stats()
+    assert st["fast_grants"] == 1
+    assert st["long_term_entries"] == 0 and st["slot_polls"] == 0
+
+
+def test_rw_gate_metadata_reads_register_and_overlap():
+    gate = RWTWAGate(2)
+    assert gate.read_metadata(lambda: 42) == 42
+    barrier = threading.Barrier(3)          # forces 3 readers inside at once
+    ths = [threading.Thread(
+        target=lambda: gate.read_metadata(lambda: barrier.wait(10)))
+        for _ in range(3)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join(10)
+    st = gate.poll_stats()
+    assert st["metadata_reads"] == 4
+    assert st["reader_overlap_max"] == 3
+    # base gates count reads but carry no reader-overlap telemetry
+    base = TWAGate(2)
+    assert base.read_metadata(base.queue_depth) == 0
+    st = base.poll_stats()
+    assert st["metadata_reads"] == 1 and "reader_overlap_max" not in st
+
+
+# ---------------------------------------------------------------------------
+# Recorder + .npz round-trip
+# ---------------------------------------------------------------------------
+
+def test_recorder_roundtrip_and_drops_unfinished(tmp_path):
+    rec = LockTraceRecorder(lanes=2, gate="twa")
+    for t in range(3):
+        rec.on_draw(t)
+    for t in range(3):
+        rec.on_grant(t)
+    rec.on_release(0)
+    rec.on_release(1)                       # ticket 2 never releases: dropped
+    rec.on_read()
+    rec.on_read()
+    tr = rec.to_trace()
+    assert len(tr) == 2 and list(tr.tickets) == [0, 1]
+    assert tr.reader_fraction == 50         # 2 reads vs 2 completed writes
+    path = tmp_path / "t.npz"
+    tr.save(path)
+    tr2 = load_trace(path)
+    for k in ("arrival_s", "grant_s", "release_s", "tickets", "read_s"):
+        assert np.array_equal(getattr(tr, k), getattr(tr2, k))
+    assert (tr2.lanes, tr2.gate, tr2.name) == (2, "twa", "serve")
+
+
+def test_recorder_with_no_complete_requests_raises():
+    rec = LockTraceRecorder(lanes=1)
+    rec.on_draw(0)
+    with pytest.raises(ValueError, match="no completed"):
+        rec.to_trace()
+
+
+def test_newer_trace_version_refuses_to_load(tmp_path):
+    path = tmp_path / "future.npz"
+    meta = {"version": TRACE_VERSION + 1, "lanes": 1, "gate": "twa",
+            "name": "x"}
+    z = np.zeros(1)
+    np.savez(path, meta=np.frombuffer(json.dumps(meta).encode(), np.uint8),
+             arrival_s=z, grant_s=z, release_s=z,
+             tickets=np.zeros(1, np.int64), read_s=np.zeros(0))
+    with pytest.raises(ValueError, match="newer"):
+        load_trace(path)
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine lock= resolution (static — no model needed)
+# ---------------------------------------------------------------------------
+
+def _resolve(lock, **kw):
+    kw = {"lanes": 2, "two_tier": True, "threshold": 1, "store": None,
+          "workload": None, **kw}
+    return ServeEngine._make_gate(lock, **kw)
+
+
+def test_engine_lock_resolution():
+    gate, choice = _resolve(None)
+    assert gate.kind == "twa" and choice["source"] == "default"
+    gate, choice = _resolve(None, two_tier=False)
+    assert gate.kind == "ticket" and gate.two_tier is False
+    gate, choice = _resolve("mcs")           # any SIM_LOCKS name works
+    assert gate.kind == "ticket" and choice["source"] == "explicit"
+    inst = TWAGate(2)
+    gate, choice = _resolve(inst)
+    assert gate is inst and choice["source"] == "instance"
+
+
+def test_engine_lock_auto_without_a_store_raises(monkeypatch):
+    from repro.sim.workloads import RESULTS_STORE_ENV
+    monkeypatch.delenv(RESULTS_STORE_ENV, raising=False)
+    with pytest.raises(ValueError, match="results store"):
+        _resolve("auto")
